@@ -1,0 +1,25 @@
+"""Paper Fig 2: baseline-solution breakdown — engine latency dominates at low
+concurrency; gateway latency dominates at high concurrency (with the
+FastAPI-style gateway)."""
+from __future__ import annotations
+
+from benchmarks.common import row, run_endpoint
+
+
+def run(quick: bool = True):
+    rows = []
+    concs = [2, 16] if quick else [4, 32, 64]
+    for style in ("hf", "scalellm"):
+        for c in concs:
+            n = min(3 * c, 24 if quick else 20 * c)
+            s = run_endpoint(style, "baseline", concurrency=c, n_requests=n,
+                             max_new=8, timeout_s=45 if style == "hf" else 60)
+            rows.append(row(
+                f"fig2.{style}+fastapi_gw.c{c}.engine_latency",
+                s.mean["engine_latency"] * 1e6,
+                gateway_latency_us=s.mean["gateway_latency"] * 1e6,
+                avg_latency_us=s.mean["avg_latency"] * 1e6,
+                throughput_tok_s=s.throughput_tok_s,
+                timeout_frac=s.timeout_frac,
+            ))
+    return rows

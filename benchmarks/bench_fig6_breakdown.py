@@ -1,0 +1,28 @@
+"""Paper Fig 6 + Exp2: latency decomposition across the {baseline, scale}
+engine x gateway grid. Reproduces the paper's phenomenon: the optimized
+engine makes the baseline gateway the bottleneck; swapping in the ScaleLLM
+gateway moves the bottleneck back to the engine."""
+from __future__ import annotations
+
+from benchmarks.common import row, run_endpoint
+
+GRID = [("vllm", "baseline"), ("vllm", "scale"),
+        ("scalellm", "baseline"), ("scalellm", "scale")]
+
+
+def run(quick: bool = True):
+    rows = []
+    concs = [4, 16] if quick else [4, 16, 64, 128]
+    for style, gw in GRID:
+        for c in concs:
+            n = min(2 * c, 24 if quick else 20 * c)
+            s = run_endpoint(style, gw, concurrency=c, n_requests=n, max_new=8)
+            rows.append(row(
+                f"fig6.{style}_engine+{gw}_gw.c{c}.gateway_latency",
+                s.mean["gateway_latency"] * 1e6,
+                engine_latency_us=s.mean["engine_latency"] * 1e6,
+                avg_latency_us=s.mean["avg_latency"] * 1e6,
+                bottleneck=("gateway" if s.mean["gateway_latency"] >
+                            s.mean["engine_latency"] else "engine"),
+            ))
+    return rows

@@ -1,0 +1,23 @@
+"""Paper Fig 7: throughput for engine x gateway combinations vs concurrency —
+the cumulative impact of engine and gateway optimizations."""
+from __future__ import annotations
+
+from benchmarks.common import row, run_endpoint
+
+GRID = [("vllm", "baseline"), ("vllm", "scale"),
+        ("scalellm", "baseline"), ("scalellm", "scale")]
+
+
+def run(quick: bool = True):
+    rows = []
+    concs = [2, 8] if quick else [1, 4, 16, 64, 256]
+    for style, gw in GRID:
+        for c in concs:
+            n = min(2 * c, 16 if quick else 20 * c)
+            s = run_endpoint(style, gw, concurrency=c, n_requests=n, max_new=8)
+            rows.append(row(
+                f"fig7.{style}_engine+{gw}_gw.c{c}.throughput",
+                1e6 / max(s.throughput_tok_s, 1e-9),
+                throughput_tok_s=s.throughput_tok_s,
+            ))
+    return rows

@@ -1,0 +1,68 @@
+"""Kernel/engine micro-benchmarks (CPU wall time of the executable paths;
+Pallas TPU kernels are validated in interpret mode — their perf story is the
+roofline, not CPU timing)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import get_model, row
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.metrics import Request
+from repro.kernels.flash_attention import flash_attention
+
+
+def _time(fn, n=5):
+    fn()                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def run(quick: bool = True):
+    rows = []
+    r = np.random.default_rng(0)
+
+    # flash attention (chunked-xla path, what the CPU engine executes)
+    B, S, H, Hkv, D = 2, 256, 4, 2, 32
+    q = jnp.asarray(r.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, S, Hkv, D)), jnp.float32)
+    t = _time(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, block_q=64, block_kv=64, backend="xla")))
+    rows.append(row("kernels.flash_attention_xla.B2S256", t * 1e6,
+                    flops=4 * B * S * S * H * D))
+
+    # one engine decode iteration at full slots
+    cfg, model, params = get_model()
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=8, page_size=8, num_pages=256, max_seq=128,
+        prefill_bucket=16, greedy=True))
+    reqs = [Request(req_id=f"k{i}", prompt_tokens=r.integers(1, cfg.vocab, 12).astype(np.int32),
+                    max_new_tokens=64) for i in range(8)]
+    for q_ in reqs:
+        eng.submit(q_)
+    eng.step()                              # admissions + first decode (compiles)
+    t = _time(lambda: eng.step(), n=10)
+    rows.append(row("engine.decode_step.8slots", t * 1e6,
+                    tokens_per_s=8 / t))
+
+    # prefill at two buckets
+    for L in (16, 64):
+        req = Request(req_id=f"p{L}", prompt_tokens=r.integers(1, cfg.vocab, L - 2).astype(np.int32),
+                      max_new_tokens=1)
+        eng2 = InferenceEngine(model, params, EngineConfig(
+            max_slots=1, page_size=8, num_pages=256, max_seq=128,
+            prefill_bucket=16, greedy=True))
+        eng2.generate([req])               # includes compile
+        req2 = Request(req_id=f"p{L}b", prompt_tokens=r.integers(1, cfg.vocab, L - 2).astype(np.int32),
+                       max_new_tokens=1)
+        t0 = time.perf_counter()
+        eng2.generate([req2])
+        t = time.perf_counter() - t0
+        rows.append(row(f"engine.prefill.bucket{L}", t * 1e6, prompt_len=L - 2))
+    return rows

@@ -1,0 +1,24 @@
+"""Paper Table 1: streaming TTFT / TBT vs concurrency for the three
+endpoints, with the paper's 60s timeout rule."""
+from __future__ import annotations
+
+from benchmarks.common import row, run_endpoint
+
+ENDPOINTS = [("hf", "baseline"), ("vllm", "baseline"), ("scalellm", "scale")]
+
+
+def run(quick: bool = True):
+    rows = []
+    concs = [1, 4, 8] if quick else [1, 2, 4, 8, 16, 32, 64]
+    for style, gw in ENDPOINTS:
+        for c in concs:
+            n = min(2 * c, 12 if quick else 20 * c)
+            s = run_endpoint(style, gw, concurrency=c, n_requests=n, max_new=10,
+                             timeout_s=30 if style == "hf" else 60)
+            rows.append(row(
+                f"table1.{style}.c{c}.ttft",
+                s.mean["ttft_user"] * 1e6,
+                tbt_us=s.mean["tbt"] * 1e6,
+                timeout_frac=s.timeout_frac,
+            ))
+    return rows

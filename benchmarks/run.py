@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the paper-scale
+concurrency sweeps (slow on CPU); default is the quick profile.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (fig2,fig5,fig6,fig7,table1,fig8,kernels)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_fig2_breakdown, bench_fig5_endpoints,
+                            bench_fig6_breakdown, bench_fig7_throughput,
+                            bench_fig8_parallelism, bench_kernels,
+                            bench_table1_streaming)
+    from benchmarks.common import warmup
+
+    benches = {
+        "fig2": bench_fig2_breakdown,
+        "fig5": bench_fig5_endpoints,
+        "fig6": bench_fig6_breakdown,
+        "fig7": bench_fig7_throughput,
+        "table1": bench_table1_streaming,
+        "fig8": bench_fig8_parallelism,
+        "kernels": bench_kernels,
+    }
+    selected = args.only.split(",") if args.only else list(benches)
+
+    print("name,us_per_call,derived")
+    warmup()
+    for name in selected:
+        mod = benches[name]
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=quick)
+        except Exception as e:  # a failing bench must not hide the others
+            print(f"{name}.ERROR,0,\"{type(e).__name__}: {e}\"", flush=True)
+            continue
+        for r in rows:
+            derived = json.dumps(r["derived"], default=str).replace('"', "'")
+            print(f"{r['name']},{r['us_per_call']:.1f},\"{derived}\"", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

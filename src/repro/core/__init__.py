@@ -1,0 +1,20 @@
+# The paper's primary contribution: the end-to-end serving system
+# (gateway + router + replicas + continuous-batching engine + paged KV).
+from repro.core.engine import EngineConfig, InferenceEngine, TokenEvent
+from repro.core.gateway import Gateway, GatewayConfig, baseline_gateway_config, scale_gateway_config
+from repro.core.kv_cache import OutOfPages, PagedAllocator
+from repro.core.metrics import BenchmarkSummary, Request, now, request_metrics, summarize
+from repro.core.observability import MetricsSink
+from repro.core.replica import Replica
+from repro.core.router import NoReplicaAvailable, ReplicaRouter, RouterConfig
+from repro.core.scheduler import ContinuousBatchScheduler
+from repro.core.serde import CODECS
+
+__all__ = [
+    "EngineConfig", "InferenceEngine", "TokenEvent",
+    "Gateway", "GatewayConfig", "baseline_gateway_config", "scale_gateway_config",
+    "OutOfPages", "PagedAllocator", "BenchmarkSummary", "Request", "now",
+    "request_metrics", "summarize", "MetricsSink", "Replica",
+    "NoReplicaAvailable", "ReplicaRouter", "RouterConfig",
+    "ContinuousBatchScheduler", "CODECS",
+]

@@ -1,0 +1,91 @@
+"""Async client workload driver — simulates users submitting OpenAI-API-style
+requests "in a concurrent and continuous manner" (paper §5): a fixed
+concurrency window of in-flight requests, 20 x concurrency total requests,
+streaming consumption with client-side t0/t5/t6 timestamps.
+"""
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.gateway import Gateway
+from repro.core.metrics import Request, now, summarize
+from repro.core.serde import CODECS
+from repro.data.workload import WorkloadSpec, sample_workload
+
+
+@dataclass
+class ClientResult:
+    requests: List[Request]
+    t_start: float
+    t_end: float
+
+
+async def run_workload(
+    gateway: Gateway,
+    prompts: List[np.ndarray],
+    *,
+    concurrency: int,
+    max_new_tokens: int = 64,
+    timeout_s: float = 60.0,
+    auth_token: str = "",
+) -> ClientResult:
+    codec = CODECS[gateway.cfg.codec]
+    sem = asyncio.Semaphore(concurrency)
+    requests: List[Request] = []
+
+    async def one(i: int, prompt: np.ndarray) -> Request:
+        async with sem:
+            req_id = f"req-{i}"
+            shadow = Request(req_id=req_id, prompt_tokens=prompt,
+                             max_new_tokens=max_new_tokens)
+            requests.append(shadow)
+            shadow.t0 = now()
+            raw = codec.encode_request(req_id, prompt.tolist(), {
+                "max_new_tokens": max_new_tokens})
+            q: "asyncio.Queue[bytes]" = asyncio.Queue()
+            await gateway.handle(raw, q, auth_token=auth_token)
+            n = 0
+            while True:
+                try:
+                    data = await asyncio.wait_for(q.get(), timeout=timeout_s)
+                except asyncio.TimeoutError:
+                    shadow.error = "timeout"
+                    break
+                if data == b"":
+                    shadow.error = "rejected"
+                    break
+                _, token, idx, fin = codec.decode_token(data)
+                t = now()
+                if shadow.t5 == 0.0:
+                    shadow.t5 = t
+                shadow.generated.append(token)
+                shadow.token_times.append(t)
+                n += 1
+                if fin:
+                    shadow.t6 = t
+                    shadow.finished = True
+                    break
+            return shadow
+
+    t_start = now()
+    await asyncio.gather(*(one(i, p) for i, p in enumerate(prompts)))
+    t_end = now()
+    return ClientResult(requests=requests, t_start=t_start, t_end=t_end)
+
+
+def merge_engine_timestamps(client_reqs: List[Request], gateway: Gateway) -> None:
+    """Join the client-side shadows (t0/t5/t6, received tokens) with the
+    gateway-side records (t1..t4, preemptions, replica id) by req_id — the
+    same log-join the paper's end-to-end measurement performs."""
+    for r in client_reqs:
+        g = gateway.requests.get(r.req_id)
+        if g is None:
+            continue
+        r.t1, r.t2, r.t3, r.t4 = g.t1, g.t2, g.t3, g.t4
+        r.preemptions = g.preemptions
+        r.replica_id = g.replica_id
+        r.hedged = g.hedged

@@ -1,0 +1,357 @@
+"""The inference engine: jitted prefill/decode over fixed batch-slot shapes,
+paged KV, continuous batching, temperature/top-p sampling.
+
+Design (TPU-native, runs for real on CPU):
+  - decode is ONE jitted function over (max_slots, 1) — slots that are empty
+    are masked; no recompilation ever happens during serving.
+  - prefill is jitted per power-of-two length bucket (a handful of compiles).
+  - prefill fills a fresh dense cache, which is then scattered into the paged
+    pool (jitted, donated) — pages for attention KV, slot-indexed pools for
+    SSM state / conv state / cross-attention memory.
+  - the scheduler's max-utilization policy pauses requests under page
+    pressure (see scheduler.py) and the engine re-prefills them on return.
+
+``host_overhead_s`` models engine-runtime software overhead per iteration and
+is used ONLY by the benchmark harness to represent baseline engines
+(HF/vLLM-class host overhead) — the ScaleLLM engine runs with 0.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.kv_cache import PagedAllocator
+from repro.core.metrics import Request, now
+from repro.core.scheduler import ContinuousBatchScheduler, SlotState
+from repro.models import LM, RunCtx
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 8
+    page_size: int = 16
+    num_pages: int = 512
+    max_seq: int = 512
+    prefill_bucket: int = 32          # min prefill padding bucket
+    temperature: float = 0.5
+    top_p: float = 0.7
+    greedy: bool = False
+    scheduler: str = "max_utilization"
+    eos_id: int = -1                  # -1: no EOS (length-controlled)
+    host_overhead_s: float = 0.0      # baseline-engine emulation knob (benchmarks)
+    cache_dtype: Any = jnp.float32
+    seed: int = 0
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return (self.max_seq + self.page_size - 1) // self.page_size
+
+
+@dataclass
+class TokenEvent:
+    request: Request
+    token: int
+    t_emit: float
+    finished: bool
+
+
+# Module-level jit cache: replicas sharing a model reuse compiled programs
+# (a fleet of N replicas compiles once, not N times).
+_JIT_CACHE: Dict[Tuple, Callable] = {}
+
+
+def _cached_jit(kind: str, model, ctx, sampling, builder):
+    key = (kind, id(model), ctx, sampling)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = builder()
+    return _JIT_CACHE[key]
+
+
+def sample_tokens(logits, key, temperature: float, top_p: float, greedy: bool):
+    """logits (B, V) -> (B,) int32. Nucleus sampling with temperature."""
+    if greedy or temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / temperature
+    sl, si = jax.lax.top_k(l, l.shape[-1])                  # descending sort
+    p = jax.nn.softmax(sl, axis=-1)
+    keep = (jnp.cumsum(p, axis=-1) - p) < top_p             # first always kept
+    sl = jnp.where(keep, sl, -jnp.inf)
+    g = jax.random.gumbel(key, sl.shape)
+    choice = jnp.argmax(sl + g, axis=-1)
+    return jnp.take_along_axis(si, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+
+
+class InferenceEngine:
+    """Single-replica engine. Thread-safety is owned by core.replica."""
+
+    def __init__(self, model: LM, params, cfg: EngineConfig, ctx: Optional[RunCtx] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx or RunCtx(attn_backend="xla", moe_strategy="dropless",
+                                 block_q=128, block_kv=128)
+        self.allocator = PagedAllocator(cfg.num_pages, cfg.page_size, cfg.max_pages_per_seq)
+        self.scheduler = ContinuousBatchScheduler(
+            cfg.max_slots, self.allocator, policy=cfg.scheduler, max_seq=cfg.max_seq)
+        self.cache = model.init_cache(
+            cfg.max_slots, cfg.max_seq, cfg.cache_dtype, kind="paged",
+            page_size=cfg.page_size, num_pages=cfg.num_pages)
+        self.page_table = np.zeros((cfg.max_slots, cfg.max_pages_per_seq), np.int32)
+        self.lengths = np.zeros((cfg.max_slots,), np.int32)
+        self.last_tokens = np.zeros((cfg.max_slots,), np.int32)
+        self.extras: Dict[str, Any] = {}  # frames/patches per slot (encdec/vlm)
+        self._key = jax.random.PRNGKey(cfg.seed)
+        sampling = (cfg.temperature, cfg.top_p, cfg.greedy, cfg.page_size)
+        self._decode_jit = _cached_jit(
+            "decode", model, self.ctx, sampling,
+            lambda: jax.jit(self._decode_fn, donate_argnums=(1,)))
+        self._prefill_jit = _cached_jit(
+            "prefill", model, self.ctx, sampling,
+            lambda: jax.jit(self._prefill_fn))
+        self._scatter_jit = _cached_jit(
+            "scatter", model, self.ctx, sampling,
+            lambda: jax.jit(self._scatter_fn, donate_argnums=(0,),
+                            static_argnames=("slot_pages",)))
+        self.steps = 0
+        self.decode_tokens = 0
+
+    # ------------------------------------------------------------- jitted fns
+    def _decode_fn(self, params, cache, tokens, positions, page_table, lengths, key, active):
+        logits, cache = self.model.decode_step(
+            params, tokens, cache, positions, self.ctx,
+            page_table=page_table, lengths=lengths)
+        nxt = sample_tokens(logits, key, self.cfg.temperature, self.cfg.top_p,
+                            self.cfg.greedy)
+        return jnp.where(active, nxt, 0), cache
+
+    def _prefill_fn(self, params, batch, dense_cache, key, last_pos):
+        logits, dense_cache = self.model.prefill(params, batch, dense_cache,
+                                                 self.ctx, last_pos=last_pos)
+        nxt = sample_tokens(logits, key, self.cfg.temperature, self.cfg.top_p,
+                            self.cfg.greedy)
+        return nxt, dense_cache
+
+    def _scatter_fn(self, pool, dense, page_ids, slot, *, slot_pages: int):
+        """Move a (B=1, Spad) dense prefill cache into the paged pool at
+        `slot`. page_ids: (max_pages_per_seq,) physical ids (tail entries 0)."""
+        ps = self.cfg.page_size
+
+        def walk(pool_n, dense_n):
+            out = {}
+            for name, pv in pool_n.items():
+                dv = dense_n.get({"kp": "k", "vp": "v"}.get(name, name))
+                if isinstance(pv, dict):
+                    out[name] = walk(pv, dv)
+                elif name in ("kp", "vp"):
+                    src = dv[:, 0]                        # (R, W, Hkv, hd)
+                    R, W = src.shape[0], src.shape[1]
+                    npg = min(W // ps, slot_pages) if W >= ps else 0
+                    if npg > 0:
+                        blocks = src[:, : npg * ps].reshape(R, npg, ps, *src.shape[2:])
+                        out[name] = pv.at[:, page_ids[:npg]].set(blocks.astype(pv.dtype))
+                    else:
+                        out[name] = pv
+                elif name in ("state", "conv", "ck", "cv"):
+                    out[name] = pv.at[:, slot].set(dv[:, 0].astype(pv.dtype))
+                else:                                     # k/v/slot_pos unused in pool
+                    out[name] = pv
+            return out
+
+        new_groups = []
+        for g_pool, g_dense in zip(pool["groups"], dense["groups"]):
+            new_groups.append([walk(pp, dd) for pp, dd in zip(g_pool, g_dense)])
+        return {"groups": new_groups}
+
+    # ------------------------------------------------------------- helpers
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _bucket(self, n: int) -> int:
+        b = self.cfg.prefill_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.cfg.max_seq)
+
+    def submit(self, request: Request) -> None:
+        self.scheduler.add(request)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # ------------------------------------------------------------- prefill
+    def _run_prefill(self, st: SlotState) -> Optional[int]:
+        """Prefill fed tokens for a slot; returns the first sampled token for
+        FRESH requests (None for resumed ones)."""
+        resumed = len(st.request.generated) > 0
+        feed = st.all_tokens[:-1] if resumed else st.all_tokens
+        L = len(feed)
+        Lp = self._bucket(L)
+        toks = np.zeros((1, Lp), np.int32)
+        toks[0, :L] = feed
+        batch = {"tokens": jnp.asarray(toks)}
+        cfgm = self.model.cfg
+        if cfgm.encoder is not None:
+            batch["frames"] = self.extras.get(
+                (st.request.req_id, "frames"),
+                jnp.zeros((1, cfgm.encoder.cross_attn_memory, cfgm.d_model), jnp.float32))
+        if cfgm.vision is not None:
+            batch["patches"] = self.extras.get(
+                (st.request.req_id, "patches"),
+                jnp.zeros((1, cfgm.vision.n_patches, cfgm.vision.d_patch), jnp.float32))
+
+        dense = self.model.init_cache(
+            1, Lp, self.cfg.cache_dtype, kind="dense",
+            memory_len=cfgm.encoder.cross_attn_memory if cfgm.encoder else 0)
+        nxt, dense = self._prefill_jit(self.params, batch, dense, self._next_key(),
+                                       jnp.asarray([L - 1], jnp.int32))
+
+        # KV for positions >= L in the padded prefill is garbage, but pages
+        # only cover ceil(L/ps); attention masks by `lengths`, so it is inert.
+        self.allocator.allocate(st.slot, L)
+        row = self.allocator.page_table_row(st.slot)
+        self.page_table[st.slot] = row
+        n_pages = self.allocator.pages_needed(L)
+        self.cache = self._scatter_jit(self.cache, dense, jnp.asarray(row),
+                                       st.slot, slot_pages=n_pages)
+        self.lengths[st.slot] = L
+        st.fed = L
+        if resumed:
+            st.last_token = st.all_tokens[-1]
+            return None
+        tok = int(nxt[0])
+        st.last_token = tok
+        st.all_tokens.append(tok)
+        return tok
+
+    # ------------------------------------------------------------- step
+    def step(self) -> List[TokenEvent]:
+        """One engine iteration: admissions (prefill) + one decode sweep."""
+        cfg = self.cfg
+        events: List[TokenEvent] = []
+        if cfg.host_overhead_s > 0:
+            time.sleep(cfg.host_overhead_s)
+        self.steps += 1
+
+        # ---- admissions
+        for st in self.scheduler.schedule().admit:
+            r = st.request
+            if r.t2 == 0.0:
+                r.t2 = now()
+            st.admitted_at = now()
+            tok = self._run_prefill(st)
+            if tok is not None:
+                r.generated.append(tok)
+                fin = self._check_finished(st, tok)
+                events.append(TokenEvent(r, tok, now(), fin))
+                if fin:
+                    self._finish(st)
+
+        # ---- decode sweep
+        active_slots = [s for s, st in self.scheduler.running.items() if st.fed > 0]
+        if not active_slots:
+            return events
+        for s in list(active_slots):
+            if s not in self.scheduler.running:            # preempted by an earlier grow
+                active_slots.remove(s)
+                continue
+            if not self.scheduler.grow_for_decode(s):
+                active_slots.remove(s)                     # paused/unschedulable
+                continue
+            self.page_table[s] = self.allocator.page_table_row(s)
+        # preemption may have removed slots
+        active_slots = [s for s in active_slots if s in self.scheduler.running]
+        if not active_slots:
+            return events
+
+        M = cfg.max_slots
+        # inactive slots must point at the reserved null page 0: the jitted
+        # decode writes KV for every slot, and a stale row would corrupt pages
+        # that have been freed and reallocated to another sequence.
+        for s in range(M):
+            if s not in self.scheduler.running:
+                self.page_table[s] = 0
+        tokens = np.zeros((M, 1), np.int32)
+        positions = np.zeros((M,), np.int32)
+        active = np.zeros((M,), bool)
+        for s in active_slots:
+            st = self.scheduler.running[s]
+            tokens[s, 0] = st.last_token
+            positions[s] = st.fed
+            active[s] = True
+        lengths = jnp.asarray(np.where(active, positions + 1, np.maximum(self.lengths, 1)).astype(np.int32))
+        nxt, self.cache = self._decode_jit(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(self.page_table), lengths, self._next_key(), jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        t_emit = now()
+        self.decode_tokens += len(active_slots)
+
+        for s in active_slots:
+            st = self.scheduler.running[s]
+            st.fed += 1
+            self.lengths[s] = st.fed
+            tok = int(nxt[s])
+            st.last_token = tok
+            st.all_tokens.append(tok)
+            st.request.generated.append(tok)
+            fin = self._check_finished(st, tok)
+            events.append(TokenEvent(st.request, tok, t_emit, fin))
+            if fin:
+                self._finish(st)
+        return events
+
+    def _check_finished(self, st: SlotState, tok: int) -> bool:
+        r = st.request
+        if len(r.generated) >= r.max_new_tokens:
+            return True
+        if self.cfg.eos_id >= 0 and tok == self.cfg.eos_id:
+            return True
+        if st.fed + 1 >= self.cfg.max_seq:
+            return True
+        return False
+
+    def _finish(self, st: SlotState) -> None:
+        st.request.finished = True
+        st.request.t3 = now()
+        self.scheduler.finish(st.slot)
+        self.lengths[st.slot] = 0
+
+    def cancel(self, req_id: str) -> bool:
+        """Drop a request (hedging loser / client disconnect). Frees its slot."""
+        for i, r in enumerate(self.scheduler.waiting):
+            if r.req_id == req_id:
+                del self.scheduler.waiting[i]
+                return True
+        for slot, st in list(self.scheduler.running.items()):
+            if st.request.req_id == req_id:
+                self.scheduler.finish(slot)
+                self.lengths[slot] = 0
+                self.page_table[slot] = 0
+                return True
+        return False
+
+    # ------------------------------------------------------------- sync api
+    def generate(self, requests: List[Request], max_steps: int = 100_000) -> List[Request]:
+        """Blocking helper for tests/benchmarks without the gateway stack."""
+        for r in requests:
+            r.t0 = r.t0 or now()
+            r.t1 = r.t1 or now()
+            self.submit(r)
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            for ev in self.step():
+                if ev.request.t4 == 0.0:
+                    ev.request.t4 = ev.t_emit
+                    ev.request.t5 = now()
+                if ev.finished:
+                    ev.request.t6 = now()
+            steps += 1
+        return requests

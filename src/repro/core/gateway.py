@@ -1,0 +1,143 @@
+"""The gateway — where the paper's end-to-end contribution lives (§4.2).
+
+Two real, measured implementations:
+
+``BaselineGateway`` (the FastAPI/HTTP1.1+JSON stand-in)
+  - verbose OpenAI-style JSON chunks via stdlib ``json``
+  - per-request connection establishment to the engine (HTTP/1.1 handshake,
+    modeled as an awaited latency constant — documented in EXPERIMENTS.md)
+  - a bounded sync-worker semaphore (FastAPI's threadpool under GIL): request
+    validation + serde run inside it
+
+``ScaleGateway`` (the Axum/Tokio + gRPC/protobuf adaptation)
+  - compact msgpack frames (protobuf stand-in, C-speed codec)
+  - connection POOL to replicas: handshake paid once per replica, not per
+    request
+  - fully async admission path, no sync-worker ceiling
+
+Both share the Safety module (auth/rate-limit/content-filter), the router,
+and the Observability sink, and stream per-token messages back to the client
+through asyncio queues (events cross from replica threads via
+``loop.call_soon_threadsafe`` — the zero-copy bridge).
+"""
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Set
+
+import numpy as np
+
+from repro.core.engine import TokenEvent
+from repro.core.metrics import Request, now
+from repro.core.observability import MetricsSink
+from repro.core.router import ReplicaRouter
+from repro.core.safety import AuthError, Authenticator, ContentBlocked, ContentFilter, RateLimited, TokenBucket
+from repro.core.serde import CODECS
+
+
+@dataclass
+class GatewayConfig:
+    codec: str = "binary"              # "json" (baseline) | "binary" (scale)
+    conn_setup_s: float = 0.0003       # per-connection handshake latency
+    pooled_connections: bool = True    # pool (scale) vs per-request (baseline)
+    sync_workers: int = 0              # >0: bounded sync path (baseline)
+    name: str = "scale"
+
+
+def baseline_gateway_config() -> GatewayConfig:
+    return GatewayConfig(codec="json", conn_setup_s=0.0003,
+                         pooled_connections=False, sync_workers=8, name="baseline")
+
+
+def scale_gateway_config() -> GatewayConfig:
+    return GatewayConfig(codec="binary", conn_setup_s=0.0003,
+                         pooled_connections=True, sync_workers=0, name="scale")
+
+
+class Gateway:
+    def __init__(self, router: ReplicaRouter, cfg: Optional[GatewayConfig] = None,
+                 auth: Optional[Authenticator] = None,
+                 rate_limiter: Optional[TokenBucket] = None,
+                 content_filter: Optional[ContentFilter] = None,
+                 sink: Optional[MetricsSink] = None,
+                 require_auth: bool = False):
+        self.router = router
+        self.cfg = cfg or scale_gateway_config()
+        self.codec = CODECS[self.cfg.codec]
+        self.auth = auth or Authenticator()
+        self.rate_limiter = rate_limiter
+        self.content_filter = content_filter
+        self.sink = sink or router.sink
+        self.require_auth = require_auth
+        self._pool_ready: Set[str] = set()     # replicas with a live connection
+        self._sem: Optional[asyncio.Semaphore] = None
+        self.requests: Dict[str, Request] = {}  # server-side registry (metrics join)
+
+    def _semaphore(self) -> Optional[asyncio.Semaphore]:
+        if self.cfg.sync_workers > 0 and self._sem is None:
+            self._sem = asyncio.Semaphore(self.cfg.sync_workers)
+        return self._sem
+
+    # ------------------------------------------------------------------
+    async def handle(self, raw: bytes, client_q: "asyncio.Queue[bytes]",
+                     auth_token: str = "") -> None:
+        """Accept one streaming request. Returns after admission; tokens
+        stream into ``client_q`` (b"" sentinel on error)."""
+        t1 = now()
+        sem = self._semaphore()
+        if sem is not None:
+            await sem.acquire()
+        try:
+            req_id, tokens, params = self.codec.decode_request(raw)
+            if self.require_auth:
+                user = self.auth.verify(auth_token)
+            else:
+                user = "anon"
+            if self.rate_limiter is not None:
+                self.rate_limiter.check(user)
+            if self.content_filter is not None:
+                self.content_filter.check(tokens)
+        except (AuthError, RateLimited, ContentBlocked) as e:
+            self.sink.incr(f"rejected.{type(e).__name__}")
+            client_q.put_nowait(b"")
+            if sem is not None:
+                sem.release()
+            return
+        finally:
+            pass
+
+        request = Request(
+            req_id=req_id,
+            prompt_tokens=np.asarray(tokens, np.int32),
+            max_new_tokens=int(params.get("max_new_tokens", 64)),
+            temperature=float(params.get("temperature", 0.5)),
+            top_p=float(params.get("top_p", 0.7)),
+            user_id=user,
+        )
+        request.t1 = t1
+        self.requests[req_id] = request
+
+        loop = asyncio.get_running_loop()
+        codec = self.codec
+
+        def on_event(ev: TokenEvent) -> None:
+            # replica-thread side: timestamp + encode, then hop to the loop
+            r = ev.request
+            if r.t4 == 0.0:
+                r.t4 = ev.t_emit
+            payload = codec.encode_token(r.req_id, ev.token, r.n_generated - 1,
+                                         ev.finished)
+            loop.call_soon_threadsafe(client_q.put_nowait, payload)
+
+        # connection to the chosen replica
+        replica = self.router.select()
+        if not self.cfg.pooled_connections:
+            await asyncio.sleep(self.cfg.conn_setup_s)          # per-request handshake
+        elif replica.replica_id not in self._pool_ready:
+            await asyncio.sleep(self.cfg.conn_setup_s)          # pay once, then reuse
+            self._pool_ready.add(replica.replica_id)
+
+        self.router.submit(request, on_event, replica=replica)
+        if sem is not None:
+            sem.release()

@@ -1,0 +1,88 @@
+"""Paged KV cache management (host side): the PagedAttention resource model.
+
+The device side is a global physical page pool per layer (see
+``LM.init_cache(kind="paged")`` and the Pallas paged_attention kernel); this
+module owns the *allocator*: free-page list, per-slot page tables, and the
+capacity queries the scheduler's max-utilization policy needs.
+
+Invariants (property-tested):
+  - a physical page is owned by at most one slot at any time
+  - free + allocated == total
+  - page_table entries for a slot cover ceil(len/page_size) pages exactly
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(Exception):
+    pass
+
+
+@dataclass
+class PagedAllocator:
+    num_pages: int
+    page_size: int
+    max_pages_per_seq: int
+
+    def __post_init__(self):
+        # page 0 is reserved as the "null" page so uninitialized page-table
+        # entries never alias a live page
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}
+
+    # ---------------- queries ----------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return (n_tokens + self.page_size - 1) // self.page_size
+
+    def can_allocate(self, slot: int, n_tokens: int) -> bool:
+        have = len(self._owned.get(slot, []))
+        need = self.pages_needed(n_tokens) - have
+        return need <= len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / max(self.num_pages - 1, 1)
+
+    # ---------------- mutations ----------------
+    def allocate(self, slot: int, n_tokens: int) -> List[int]:
+        """Ensure `slot` owns enough pages for n_tokens; returns newly added."""
+        owned = self._owned.setdefault(slot, [])
+        need = self.pages_needed(n_tokens) - len(owned)
+        if need > len(self._free):
+            raise OutOfPages(f"slot {slot}: need {need}, free {len(self._free)}")
+        if len(owned) + max(need, 0) > self.max_pages_per_seq:
+            raise OutOfPages(f"slot {slot}: exceeds max_pages_per_seq")
+        new = [self._free.pop() for _ in range(max(need, 0))]
+        owned.extend(new)
+        return new
+
+    def free(self, slot: int) -> int:
+        owned = self._owned.pop(slot, [])
+        self._free.extend(owned)
+        return len(owned)
+
+    def page_table_row(self, slot: int) -> np.ndarray:
+        row = np.zeros(self.max_pages_per_seq, np.int32)
+        owned = self._owned.get(slot, [])
+        row[: len(owned)] = owned
+        return row
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, []))
+
+    def check_invariants(self) -> None:
+        allocated = [p for pages in self._owned.values() for p in pages]
+        assert len(set(allocated)) == len(allocated), "page double-owned"
+        assert set(allocated).isdisjoint(self._free), "page both free and owned"
+        assert len(allocated) + len(self._free) == self.num_pages - 1, "page leak"

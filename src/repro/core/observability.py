@@ -1,0 +1,54 @@
+"""Observability module: counters + a metrics sink that persists request
+records to local disk (paper Figure 1's Observability Module)."""
+from __future__ import annotations
+
+import os
+import threading
+from collections import defaultdict
+from dataclasses import asdict
+from typing import Any, Dict, List, Optional
+
+import orjson
+
+from repro.core.metrics import Request, request_metrics
+
+
+class MetricsSink:
+    """Thread-safe in-memory counters + optional async JSONL persistence."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.counters: Dict[str, float] = defaultdict(float)
+        self._records: List[bytes] = []
+        self._lock = threading.Lock()
+
+    def incr(self, name: str, value: float = 1.0) -> None:
+        with self._lock:
+            self.counters[name] += value
+
+    def record_request(self, r: Request) -> None:
+        m = request_metrics(r)
+        rec = orjson.dumps({"kind": "request", **asdict(m)})
+        with self._lock:
+            self._records.append(rec)
+            self.counters["requests_completed"] += 1
+            self.counters["tokens_generated"] += r.n_generated
+
+    def record(self, kind: str, **fields: Any) -> None:
+        rec = orjson.dumps({"kind": kind, **fields})
+        with self._lock:
+            self._records.append(rec)
+
+    def flush(self) -> int:
+        """Persist buffered records to disk; returns count written."""
+        with self._lock:
+            records, self._records = self._records, []
+        if self.path and records:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            with open(self.path, "ab") as f:
+                f.write(b"\n".join(records) + b"\n")
+        return len(records)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self.counters)

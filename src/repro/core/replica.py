@@ -1,0 +1,141 @@
+"""Replica: one inference engine + its serving thread + health state.
+
+"A replica represents the smallest unit of resource allocation and is
+designed to be homogeneous" (paper §3.1). Each replica owns an engine
+(optionally with a mesh slice / TP degree on real hardware) and steps it on a
+dedicated thread; token events are delivered to per-request callbacks from
+that thread (the gateway bridges them into asyncio).
+
+``kill()`` simulates a replica failure: the thread stops and the in-flight
+requests (with their partial generations) are returned so the router can
+resume them on a healthy replica.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.engine import InferenceEngine, TokenEvent
+from repro.core.metrics import Request
+
+OnEvent = Callable[[TokenEvent], None]
+
+
+class Replica:
+    def __init__(self, replica_id: str, engine: InferenceEngine, *,
+                 klass: str = "default", tp_degree: int = 1,
+                 step_watchdog_s: float = 30.0):
+        self.replica_id = replica_id
+        self.engine = engine
+        self.klass = klass                     # blueprint class: "high_tp" | "high_replica" | ...
+        self.tp_degree = tp_degree
+        self.healthy = True
+        self.step_watchdog_s = step_watchdog_s
+        self.last_step_at = time.monotonic()
+        self._inbox: "queue.Queue[Tuple[Request, OnEvent]]" = queue.Queue()
+        self._inflight: Dict[str, Tuple[Request, OnEvent]] = {}
+        self._cancel: "queue.Queue[str]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        self.total_completed = 0
+        # synchronous load counter: incremented at submit() time so the
+        # router's least-loaded choice never races the replica thread
+        self._outstanding = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "Replica":
+        self._thread = threading.Thread(target=self._loop, name=f"replica-{self.replica_id}",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop = True
+        self._wake.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    def kill(self) -> List[Tuple[Request, OnEvent]]:
+        """Simulated failure: stop serving, surrender in-flight requests."""
+        self.healthy = False
+        self.stop()
+        with self._lock:
+            orphans = list(self._inflight.values())
+            self._inflight.clear()
+        return orphans
+
+    # ------------------------------------------------------------- load stats
+    @property
+    def load(self) -> int:
+        return self._outstanding
+
+    @property
+    def active(self) -> int:
+        return len(self._inflight)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, request: Request, on_event: OnEvent) -> None:
+        if not self.healthy:
+            raise RuntimeError(f"replica {self.replica_id} is down")
+        request.replica_id = self.replica_id
+        with self._lock:
+            self._outstanding += 1
+        self._inbox.put((request, on_event))
+        self._wake.set()
+
+    def cancel(self, req_id: str) -> None:
+        self._cancel.put(req_id)
+        self._wake.set()
+
+    # ------------------------------------------------------------- engine loop
+    def _loop(self) -> None:
+        while not self._stop:
+            moved = False
+            while True:
+                try:
+                    req, cb = self._inbox.get_nowait()
+                except queue.Empty:
+                    break
+                with self._lock:
+                    self._inflight[req.req_id] = (req, cb)
+                self.engine.submit(req)
+                moved = True
+            while True:
+                try:
+                    rid = self._cancel.get_nowait()
+                except queue.Empty:
+                    break
+                self.engine.cancel(rid)
+                with self._lock:
+                    if self._inflight.pop(rid, None) is not None:
+                        self._outstanding -= 1
+                moved = True
+
+            if self.engine.has_work():
+                self.last_step_at = time.monotonic()
+                for ev in self.engine.step():
+                    rid = ev.request.req_id
+                    with self._lock:
+                        entry = self._inflight.get(rid)
+                    if entry is None:
+                        continue                        # cancelled mid-step
+                    _, cb = entry
+                    cb(ev)
+                    if ev.finished:
+                        with self._lock:
+                            if self._inflight.pop(rid, None) is not None:
+                                self._outstanding -= 1
+                        self.total_completed += 1
+            elif not moved:
+                self._wake.wait(timeout=0.002)
+                self._wake.clear()
+
+    def watchdog_expired(self) -> bool:
+        """Straggler detection: the engine has work but hasn't stepped lately."""
+        return (self.healthy and self.engine.has_work()
+                and time.monotonic() - self.last_step_at > self.step_watchdog_s)

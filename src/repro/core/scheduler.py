@@ -1,0 +1,134 @@
+"""Iteration-level (continuous) batching scheduler with the paper's
+max-utilization policy.
+
+Policies:
+  max_utilization  admit whenever a slot is free and the *prompt* fits in
+                   free pages — maximize tokens-in-flight per iteration; if
+                   pages run out mid-decode, PAUSE (preempt) the most recently
+                   admitted request, freeing its pages; it re-enters the head
+                   of the waiting queue and is re-prefilled later (the paper's
+                   "pausing requests if KV cache size limit is reached").
+  conservative     admit only if prompt + max_new_tokens worth of pages is
+                   free — no preemption can ever be needed.
+  static           classic static batching (the HF-endpoint baseline, Fig 2):
+                   admit a batch only when the engine is idle, never refill
+                   slots until every sequence in the batch finishes.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.kv_cache import OutOfPages, PagedAllocator
+from repro.core.metrics import Request
+
+
+@dataclass
+class SlotState:
+    slot: int
+    request: Request
+    all_tokens: List[int]          # prompt + generated
+    fed: int = 0                   # tokens whose KV is in the cache
+    last_token: int = -1           # sampled but not yet fed
+    admitted_at: float = 0.0
+    order: int = 0                 # admission sequence number (preemption victim choice)
+
+
+@dataclass
+class Decisions:
+    admit: List[SlotState] = field(default_factory=list)
+
+
+class ContinuousBatchScheduler:
+    def __init__(self, max_slots: int, allocator: PagedAllocator,
+                 policy: str = "max_utilization", max_seq: int = 4096):
+        assert policy in ("max_utilization", "conservative", "static")
+        self.max_slots = max_slots
+        self.allocator = allocator
+        self.policy = policy
+        self.max_seq = max_seq
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, SlotState] = {}
+        self._order = 0
+        self.n_preemptions = 0
+
+    # ------------------------------------------------------------------
+    def add(self, request: Request, *, front: bool = False) -> None:
+        if front:
+            self.waiting.appendleft(request)
+        else:
+            self.waiting.append(request)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_slots) if s not in self.running]
+
+    # ------------------------------------------------------------------
+    def _pages_for(self, req: Request, restored: int) -> int:
+        prompt_len = len(req.prompt_tokens) + restored
+        if self.policy == "conservative":
+            need = prompt_len + req.max_new_tokens
+        else:
+            need = prompt_len + 1          # max utilization: prompt + headroom
+        return self.allocator.pages_needed(need)
+
+    def schedule(self) -> Decisions:
+        d = Decisions()
+        if self.policy == "static" and self.running:
+            return d                        # static: wait for the whole batch
+        free = self.free_slots()
+        pending_pages = 0                  # pages this round's admissions will take
+        while self.waiting and free:
+            req = self.waiting[0]
+            restored = max(len(req.generated) - 1, 0)
+            need = self._pages_for(req, restored)
+            if need + pending_pages > self.allocator.free_pages:
+                break
+            pending_pages += need
+            self.waiting.popleft()
+            slot = free.pop(0)
+            all_tokens = list(map(int, req.prompt_tokens)) + list(req.generated)
+            st = SlotState(slot=slot, request=req, all_tokens=all_tokens,
+                           order=self._order)
+            self._order += 1
+            self.running[slot] = st
+            d.admit.append(st)
+        return d
+
+    # ------------------------------------------------------------------
+    def preempt_one(self, protect: Optional[int] = None) -> Optional[int]:
+        """Pause the most recently admitted running request (vLLM-style
+        latest-first victim), freeing its pages. Returns the freed slot."""
+        victims = [st for st in self.running.values() if st.slot != protect]
+        if not victims:
+            return None
+        victim = max(victims, key=lambda st: st.order)
+        victim.request.preemptions += 1
+        self.n_preemptions += 1
+        self.allocator.free(victim.slot)
+        del self.running[victim.slot]
+        self.add(victim.request, front=True)
+        return victim.slot
+
+    def finish(self, slot: int) -> None:
+        self.allocator.free(slot)
+        del self.running[slot]
+
+    def grow_for_decode(self, slot: int) -> bool:
+        """Ensure slot has a page for one more token; preempt others if the
+        policy allows. Returns False if the slot itself must pause."""
+        st = self.running[slot]
+        while True:
+            try:
+                self.allocator.allocate(slot, st.fed + 1)
+                return True
+            except OutOfPages:
+                if self.policy != "max_utilization":
+                    return False
+                if self.preempt_one(protect=slot) is None:
+                    return False

@@ -1,0 +1,43 @@
+"""Synthetic serving workload matched to OpenOrca's published length
+statistics (the dataset itself is not redistributable offline — DESIGN.md §9).
+
+Prompt lengths ~ LogNormal fitted so median ≈ 150 tokens, long tail to ~2k
+(system prompt + question); output lengths capped at the paper's
+max-generation 512. All lengths are scaled down proportionally for the
+tiny-model CPU benches via ``scale``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    n_requests: int
+    vocab: int
+    prompt_median: int = 150
+    prompt_sigma: float = 0.8
+    max_prompt: int = 2048
+    min_prompt: int = 4
+    max_new_tokens: int = 512
+    scale: float = 1.0              # shrink for tiny-model CPU benches
+    seed: int = 0
+
+
+def sample_workload(spec: WorkloadSpec) -> Tuple[List[np.ndarray], List[int]]:
+    """Returns (prompts, max_new_tokens per request)."""
+    rng = np.random.default_rng(spec.seed)
+    mu = np.log(spec.prompt_median)
+    lens = np.exp(rng.normal(mu, spec.prompt_sigma, spec.n_requests))
+    lens = np.clip(lens * spec.scale, max(int(spec.min_prompt * spec.scale), 2),
+                   max(int(spec.max_prompt * spec.scale), 4)).astype(int)
+    outs = np.minimum(
+        rng.geometric(1.0 / max(spec.max_new_tokens * spec.scale / 2, 2), spec.n_requests),
+        max(int(spec.max_new_tokens * spec.scale), 4),
+    ).astype(int)
+    outs = np.maximum(outs, 2)
+    prompts = [rng.integers(1, spec.vocab, n).astype(np.int32) for n in lens]
+    return prompts, outs.tolist()

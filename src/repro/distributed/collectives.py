@@ -1,0 +1,51 @@
+"""Distributed-optimization helpers.
+
+int8 gradient compression with error feedback (1000+-node training trick):
+gradients are quantized to int8 (per-leaf absmax scale) before the data-axis
+all-reduce; the quantization residual is carried to the next step so the
+compression is unbiased in the long run. Cuts the gradient all-reduce bytes
+4x (f32->int8), which moves the collective roofline term directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g):
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_with_feedback(grads, error):
+    """Returns (quantized pytree of (q, scale), new_error pytree).
+    error is the running residual (same tree as grads; zeros initially)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = compress_int8(g)
+        deq = decompress_int8(q, scale)
+        return (q, scale), g - deq
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = treedef.unflatten([o[0] for o in out])
+    etree = treedef.unflatten([o[1] for o in out])
+    return qtree, etree
+
+
+def decompress_grads(qtree):
+    def is_pair(x):
+        return isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+    return jax.tree.map(lambda pair: decompress_int8(*pair), qtree, is_leaf=is_pair)
+
+
+def zeros_error_like(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

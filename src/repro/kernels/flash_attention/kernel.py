@@ -1,0 +1,162 @@
+"""Pallas TPU flash attention (blocked online-softmax), MaxText-style.
+
+TARGET: TPU MXU/VMEM. Grid = (B*H, num_q_blocks, num_kv_blocks); the kv-block
+axis is innermost so the f32 accumulators live in VMEM scratch across the kv
+sweep. GQA is handled *in the index map* (kv head = q head // group) so the
+grouped KV is never materialized in HBM. Causal / sliding-window blocks that
+are wholly masked are skipped with ``pl.when`` (no MXU work), which is where
+the 2x causal FLOP saving comes from on real hardware.
+
+Validated on CPU with ``interpret=True`` against ``ref.mha_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    q_offset: int,
+    block_q: int,
+    block_kv: int,
+    num_kv_blocks: int,
+    kv_len: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this tile
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0) + q_offset
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+
+    # does this (q-block, kv-block) contain any live entry?
+    q_max = iq * block_q + block_q - 1 + q_offset
+    q_min = iq * block_q + q_offset
+    k_min = ik * block_kv
+    k_max = ik * block_kv + block_kv - 1
+    needed = k_min <= jnp.minimum(q_max, kv_len - 1) if causal else k_min < kv_len
+    if window > 0:
+        needed = jnp.logical_and(needed, k_max > q_min - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                      # (block_q, 128) lanes equal
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)          # (block_q, 1)
+        m_new = jnp.maximum(m_prev, m_cur)                  # broadcast lanes
+        alpha = jnp.exp(m_prev - m_new)                     # (block_q, 128)
+        p = jnp.exp(s - m_new[:, 0:1])                      # (block_q, block_kv)
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scr[...] * alpha[:, 0:1] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        out = jnp.where(l > 0.0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kv_len", "causal", "window", "softcap", "q_offset", "scale",
+        "block_q", "block_kv", "group", "interpret",
+    ),
+)
+def flash_attention_bhsd(
+    q3,  # (B*H,  Sq,  D)  -- Sq, Skv already padded to block multiples
+    k3,  # (B*Hkv, Skv, D)
+    v3,
+    *,
+    kv_len: int,  # true kv length before padding (<= Skv)
+    causal: bool,
+    window: int,
+    softcap: float,
+    q_offset: int,
+    scale: float,
+    block_q: int,
+    block_kv: int,
+    group: int,
+    interpret: bool = False,
+):
+    BH, Sq, D = q3.shape
+    _, Skv, _ = k3.shape
+    nq = Sq // block_q
+    nkv = Skv // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+        kv_len=kv_len,
+    )
+    grid = (BH, nq, nkv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q3.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)

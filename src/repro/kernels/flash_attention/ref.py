@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for flash attention: naive masked attention.
+
+Shapes:
+  q: (B, Sq, H, D)    k, v: (B, Skv, Hkv, D)   with H % Hkv == 0 (GQA)
+Returns (B, Sq, H, D).
+
+``q_offset`` gives the absolute position of q[0] relative to k[0] (used for
+decode / chunked prefill where q is a suffix of the kv stream).
+``lengths`` (B,) masks kv positions >= length (paged/ragged decode).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset=0,
+    lengths=None,
+    scale: float | None = None,
+):
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    # expand kv heads to match q heads
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    qi = jnp.arange(Sq)[:, None] + q_offset  # absolute q positions (Sq, 1)
+    kj = jnp.arange(Skv)[None, :]            # absolute kv positions (1, Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    mask = mask[None, None]                  # (1,1,Sq,Skv)
+    if lengths is not None:
+        mask &= (kj[None] < lengths[:, None, None])[:, None]
+
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    # rows that are fully masked (can happen with lengths=0) produce zeros
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    probs = jnp.where(denom > 0, probs / jnp.maximum(denom, 1e-30), 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.moe_gmm.ops import gmm
+from repro.kernels.moe_gmm.ref import expert_of_rows, gmm_reference
+
+__all__ = ["gmm", "gmm_reference", "expert_of_rows"]

@@ -1,0 +1,40 @@
+"""Public paged decode-attention op with pallas/xla dispatch.
+
+The xla path (gather via page_table indexing) is what the CPU serving engine
+executes; the pallas path is the TPU target, validated in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention import kernel as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_reference
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def paged_attention(
+    q, k_pages, v_pages, page_table, lengths, *,
+    scale: float | None = None, softcap: float = 0.0, window: int = 0,
+    backend: str = "auto", interpret: bool | None = None,
+):
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return paged_attention_reference(
+            q, k_pages, v_pages, page_table, lengths,
+            scale=scale, softcap=softcap, window=window,
+        )
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _kernel.paged_attention_pallas(
+        q, k_pages, v_pages, page_table, lengths,
+        scale=scale, softcap=softcap, window=window, interpret=interpret,
+    )

@@ -1,0 +1,43 @@
+"""Oracle for paged decode attention.
+
+q:          (B, H, D)         one new query token per sequence
+k_pages:    (P, page_size, Hkv, D)   global physical page pool
+v_pages:    (P, page_size, Hkv, D)
+page_table: (B, max_pages)    int32 physical page id per logical page
+lengths:    (B,)              valid kv entries per sequence (incl. current)
+
+Returns (B, H, D).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_reference(
+    q, k_pages, v_pages, page_table, lengths, *, scale=None, softcap: float = 0.0, window: int = 0
+):
+    B, H, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    group = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    k = k_pages[page_table].reshape(B, maxp * ps, Hkv, D)
+    v = v_pages[page_table].reshape(B, maxp * ps, Hkv, D)
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    s = jnp.einsum("bhd,bkhd->bhk", q, k, preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(maxp * ps)[None, :]
+    mask = pos < lengths[:, None]
+    if window > 0:
+        mask &= pos > (lengths[:, None] - 1) - window
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhk,bkhd->bhd", (p / denom).astype(jnp.float32), v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.quant_matmul.ops import quantize_int8, w8a16_matmul
+from repro.kernels.quant_matmul.ref import w8a16_matmul_reference
+
+__all__ = ["w8a16_matmul", "w8a16_matmul_reference", "quantize_int8"]

@@ -1,0 +1,68 @@
+"""Pallas TPU weight-only int8 matmul (w8a16).
+
+v5e has no fp8 MXU (DESIGN.md §2), so the quantization that pays on this
+target is int8 *storage*: HBM traffic for weights halves vs bf16 — decode is
+memory-bound, so this moves the roofline memory term directly. The kernel
+streams int8 weight tiles HBM->VMEM, dequantizes in-register, and runs the
+MXU in bf16; per-output-channel scales are applied once on the final K step.
+
+Grid = (m, n, k) with a f32 VMEM accumulator across the K sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _w8a16_kernel(x_ref, w_ref, s_ref, o_ref, acc_scr, *, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...].astype(jnp.float32)                 # (bm, bk)
+    w = w_ref[...].astype(jnp.float32)                 # (bk, bn) dequant int8->f32
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] * s_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def w8a16_matmul_pallas(
+    x,        # (M, K) bf16/f32
+    w_q,      # (K, N) int8
+    scale,    # (N,) f32 per-output-channel
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    M, K = x.shape
+    _, N = w_q.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    grid = (M // bm, N // bn, K // bk)
+    kernel = functools.partial(_w8a16_kernel, nk=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, scale.reshape(1, N))

@@ -1,0 +1,11 @@
+"""Oracle for w8a16 matmul: x (M,K) bf16/f32 @ int8 w (K,N) * scale (N,)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def w8a16_matmul_reference(x, w_q, scale):
+    out = jnp.einsum(
+        "mk,kn->mn", x.astype(jnp.float32), w_q.astype(jnp.float32)
+    ) * scale[None, :].astype(jnp.float32)
+    return out.astype(x.dtype)

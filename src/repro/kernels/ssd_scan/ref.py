@@ -1,0 +1,4 @@
+"""Oracle for the SSD chunk-scan kernel: the pure-jnp chunked SSD from
+repro.models.mamba (itself validated against a naive sequential recurrence in
+tests/test_mamba.py)."""
+from repro.models.mamba import ssd_chunked as ssd_reference  # noqa: F401

@@ -1,0 +1,48 @@
+"""Training launcher (CPU-runnable with reduced configs; the full configs are
+exercised by the dry-run's train cells).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --steps 100 \
+      --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config, tiny_config
+from repro.data.pipeline import DataConfig
+from repro.models import build_model
+from repro.training.train_step import TrainConfig
+from repro.training.trainer import TrainerConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = tiny_config(args.arch)
+    model = build_model(cfg)
+    dcfg = DataConfig(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq)
+    tcfg = TrainConfig(peak_lr=args.lr, warmup=10, total_steps=args.steps,
+                       grad_compression=args.grad_compression)
+    out = train(model, dcfg, tcfg,
+                TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every))
+    print(json.dumps({
+        "arch": args.arch, "resumed_from": out["start"],
+        "first_loss": out["losses"][0] if out["losses"] else None,
+        "last_loss": out["losses"][-1] if out["losses"] else None,
+        "steps": args.steps,
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

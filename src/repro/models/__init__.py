@@ -1,0 +1,4 @@
+from repro.models.common import RunCtx
+from repro.models.transformer import LM, build_model
+
+__all__ = ["LM", "build_model", "RunCtx"]

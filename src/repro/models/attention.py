@@ -1,0 +1,168 @@
+"""GQA attention sublayer: train / prefill / decode (dense ring-buffer cache or
+paged cache) / cross-attention. One code path per mode, shared projections.
+
+Cache formats (per layer, unstacked — the scan adds the leading layers dim):
+  dense: {"k": (B, W, Hkv, hd), "v": ..., "slot_pos": (B, W) int32}
+         W = min(max_seq, window) — a ring buffer; slot_pos holds the absolute
+         position stored in each slot (-1 = empty). Full attention is W=max_seq
+         (slot == position) through the same code.
+  paged: {"kp": (P, ps, Hkv, hd), "vp": ...} + engine-level page_table/lengths.
+  cross: {"ck": (B, M, Hkv, hd), "cv": ...} built once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.models.common import RunCtx, rope, shard_act
+
+
+def _project_qkv(p, h, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", h, p["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", h, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    return q, k, v
+
+
+def _out_proj(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _decode_dense_attn(q, cache, positions, *, window: int, softcap: float, scale: float):
+    """q: (B,1,H,hd); ring-buffer cache. Plain einsum (q len 1 needs no tiling);
+    shards under GSPMD, incl. seq-sharded caches (softmax combine collectives)."""
+    k, v, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+    B, W, Hkv, hd = k.shape
+    H = q.shape[2]
+    G = H // Hkv
+    q5 = q.reshape(B, 1, Hkv, G, hd)
+    s = jnp.einsum("bqngd,bsnd->bnqgs", q5, k, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = positions[:, None]                       # (B,1) current absolute position
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window > 0:
+        ok &= slot_pos > pos - window
+    s = jnp.where(ok[:, None, None, None, :], s, -1e30)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnqgs,bsnd->bqngd", p_attn.astype(jnp.float32), v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _write_ring(cache, k, v, positions):
+    """Scatter new kv at positions into the ring buffer. decode: k (B,1,Hkv,hd),
+    positions (B,). prefill: k (B,S,...), positions (S,) shared across batch."""
+    W = cache["k"].shape[1]
+    if k.shape[1] == 1 and positions.ndim == 1 and positions.shape[0] == k.shape[0]:
+        slots = positions % W                       # (B,)
+        b_idx = jnp.arange(k.shape[0])
+        new_k = cache["k"].at[b_idx, slots].set(k[:, 0])
+        new_v = cache["v"].at[b_idx, slots].set(v[:, 0])
+        new_sp = cache["slot_pos"].at[b_idx, slots].set(positions)
+    else:                                           # prefill: positions (S,)
+        S = k.shape[1]
+        if S > W:                                   # keep the last W tokens
+            k, v, positions = k[:, -W:], v[:, -W:], positions[-W:]
+        slots = positions % W
+        new_k = cache["k"].at[:, slots].set(k)
+        new_v = cache["v"].at[:, slots].set(v)
+        new_sp = cache["slot_pos"].at[:, slots].set(positions[None, :])
+    return {"k": new_k, "v": new_v, "slot_pos": new_sp}
+
+
+def _write_paged(cache, k, v, positions, page_table):
+    """k (B,1,Hkv,hd); positions (B,) absolute; page_table (B, maxp)."""
+    ps = cache["kp"].shape[1]
+    b_idx = jnp.arange(k.shape[0])
+    logical = positions // ps
+    slot = positions % ps
+    phys = page_table[b_idx, logical]
+    return {
+        "kp": cache["kp"].at[phys, slot].set(k[:, 0]),
+        "vp": cache["vp"].at[phys, slot].set(v[:, 0]),
+    }
+
+
+def attention_sublayer(
+    p: Dict[str, Any],
+    h,                       # normed input (B, S, d)
+    ctx: RunCtx,
+    cfg: ModelConfig,
+    kind: str,               # 'A' | 'L' | 'G' | 'X' (cross) | 'E' (encoder, bidirectional)
+    cache: Optional[Dict[str, Any]] = None,
+    positions=None,          # decode: (B,) abs position of the new token; prefill: (S,)
+    memory=None,             # cross: encoder output (B, M, d)
+    page_table=None,
+    lengths=None,
+):
+    """Returns (attn_out (B,S,d), new_cache)."""
+    window = cfg.sliding_window if kind == "L" else 0
+    softcap = cfg.attn_softcap
+    scale = cfg.head_dim ** -0.5
+    B, S, _ = h.shape
+
+    # ---------------- cross attention ----------------
+    if kind == "X":
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        if cache is not None and ctx.mode == "decode":
+            ck, cv = cache["ck"], cache["cv"]
+            new_cache = cache
+        else:
+            ck = jnp.einsum("bmd,dnk->bmnk", memory, p["wk"])
+            cv = jnp.einsum("bmd,dnk->bmnk", memory, p["wv"])
+            new_cache = {"ck": ck, "cv": cv} if cache is not None else None
+        o = flash_attention(
+            q, ck, cv, causal=False, softcap=softcap, scale=scale,
+            backend=ctx.attn_backend, block_q=ctx.block_q, block_kv=ctx.block_kv,
+            unroll=ctx.attn_unroll,
+        )
+        return _out_proj(p, o), new_cache
+
+    q, k, v = _project_qkv(p, h, cfg)
+
+    if ctx.mode == "decode":
+        q = rope(q, positions[:, None], cfg.rope_theta)   # (B,1,...)
+        k = rope(k, positions[:, None], cfg.rope_theta)
+        if cache is not None and "kp" in cache:           # paged
+            new_cache = _write_paged(cache, k, v, positions, page_table)
+            o = paged_attention(
+                q[:, 0], new_cache["kp"], new_cache["vp"], page_table, lengths,
+                scale=scale, softcap=softcap, window=window,
+                backend=ctx.attn_backend, interpret=ctx.interpret,
+            )[:, None]                                     # (B,1,H,hd)
+        else:                                              # dense ring cache
+            new_cache = _write_ring(cache, k, v, positions)
+            o = _decode_dense_attn(q, new_cache, positions, window=window,
+                                   softcap=softcap, scale=scale)
+        return _out_proj(p, o), new_cache
+
+    # ---------------- train / prefill / encoder ----------------
+    if positions is None:
+        positions = jnp.arange(S)
+    causal = kind != "E"
+    q = rope(q, positions, cfg.rope_theta)
+    k_roped = rope(k, positions, cfg.rope_theta)
+    # Megatron-SP placement: when sequence parallelism is active, the residual
+    # stream stays seq-sharded BETWEEN layers; q/k must be whole-sequence here
+    # (logical None on seq => GSPMD inserts the all-gather at the projection
+    # and the reduce-scatter after the out-projection).
+    q = shard_act(q, ("batch", None, "heads", None))
+    k_roped = shard_act(k_roped, ("batch", None, "kv_heads", None))
+    o = flash_attention(
+        q, k_roped, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        backend=ctx.attn_backend, block_q=ctx.block_q, block_kv=ctx.block_kv,
+        unroll=ctx.attn_unroll,
+    )
+    new_cache = cache
+    if cache is not None and "k" in cache:                 # prefill: persist kv
+        new_cache = _write_ring(cache, k_roped, v, positions)
+    return _out_proj(p, o), new_cache

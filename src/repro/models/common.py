@@ -1,0 +1,78 @@
+"""Shared model-runtime context and small layer primitives."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class RunCtx:
+    """Threaded through every layer: mode + execution knobs.
+
+    mode: "train" | "prefill" | "decode"
+    attn_backend: "auto" | "pallas" | "xla"  (xla = chunked online-softmax jnp;
+        it is what the dry-run lowers; pallas is the TPU kernel)
+    moe_strategy: "dropless" (exact, serving engine) | "capacity" (local
+        capacity buffers) | "tp_shardmap" | "ep_shardmap" (explicit collectives)
+    """
+    mode: str = "train"
+    mesh: Any = None
+    attn_backend: str = "xla"
+    moe_strategy: str = "capacity"
+    remat: bool = False
+    block_q: int = 512
+    block_kv: int = 1024
+    ep_axis: str = "data"
+    tp_axis: str = "model"
+    interpret: bool = True      # pallas interpret mode (CPU)
+    quant: str = "none"         # none | int8 (weight-only serving quant)
+    # Cost-model lowering knobs (launch/dryrun): XLA's cost_analysis counts
+    # loop bodies ONCE, so the roofline cost lowering unrolls layers and
+    # attention tiles (small repeat counts; affine extrapolation).
+    scan_layers: bool = True
+    attn_unroll: bool = False
+
+    def with_mode(self, mode: str) -> "RunCtx":
+        return replace(self, mode=mode)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (S,) or (B, S) absolute token positions."""
+    B, S, H, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+def dense_mlp(p, x, act_name: str):
+    act = act_fn(act_name)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    return jnp.einsum("bsf,fd->bsd", act(g) * h, p["wo"])
+
+
+def shard_act(x, logical_axes):
+    """Apply a with_sharding_constraint from the active logical-axis rules
+    (no-op when no rules are installed — CPU unit tests)."""
+    from repro.distributed.sharding import constrain
+    return constrain(x, logical_axes)

@@ -1,0 +1,160 @@
+"""Mamba2 layer via SSD (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm (train/prefill): within-chunk quadratic ("attention-like")
+term + cross-chunk state recurrence (lax.scan over chunks). Decode is an O(1)
+state update — this is why the SSM archs run the long_500k cell.
+
+Cache per layer: {"state": (B, H, P, N) f32, "conv": (B, conv_dim, d_conv-1)}.
+All decays are exp(<=0) — numerically bounded by construction.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import RunCtx, rmsnorm
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_in, H = cfg.d_inner, cfg.ssm_heads
+    GN = cfg.ssm.n_groups * cfg.ssm.d_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * GN]
+    dt = zxbcdt[..., 2 * d_in + 2 * GN :]
+    return z, xbc, dt
+
+
+def _conv_full(xbc, conv_w, conv_b):
+    """Causal depthwise conv over sequence. xbc (B,S,C); conv_w (C, K)."""
+    B, S, C = xbc.shape
+    K = conv_w.shape[-1]
+    lhs = xbc.transpose(0, 2, 1)                          # (B, C, S)
+    rhs = conv_w[:, None, :]                              # (C, 1, K)
+    out = jax.lax.conv_general_dilated(
+        lhs.astype(jnp.float32), rhs.astype(jnp.float32),
+        window_strides=(1,), padding=[(K - 1, 0)], feature_group_count=C,
+    )
+    out = out.transpose(0, 2, 1) + conv_b[None, None, :]
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def _conv_step(xbc_new, conv_state, conv_w, conv_b):
+    """xbc_new (B,1,C); conv_state (B,C,K-1). Returns (out (B,1,C), new_state)."""
+    window = jnp.concatenate([conv_state, xbc_new.transpose(0, 2, 1)], axis=-1)  # (B,C,K)
+    out = jnp.sum(window.astype(jnp.float32) * conv_w[None].astype(jnp.float32), axis=-1)
+    out = jax.nn.silu(out + conv_b[None]).astype(xbc_new.dtype)
+    return out[:, None, :], window[..., 1:]
+
+
+def ssd_chunked(x, dt, A, B_, C, chunk: int, init_state=None):
+    """x (B,L,H,P); dt (B,L,H) post-softplus; A (H,) negative; B_/C (B,L,H,N).
+    Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    Bb, L, H, Pd = x.shape
+    N = B_.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc, Q = Lp // chunk, chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(Bb, nc, Q, H, Pd).astype(f32)
+    dtc = dt.reshape(Bb, nc, Q, H).astype(f32)
+    Bc = B_.reshape(Bb, nc, Q, H, N).astype(f32)
+    Cc = C.reshape(Bb, nc, Q, H, N).astype(f32)
+
+    dA = dtc * A[None, None, None, :]                     # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                          # inclusive
+
+    # within-chunk (quadratic) term
+    CB = jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc)         # (B,nc,H,Q,Q)
+    decay = jnp.exp(cum.transpose(0, 1, 3, 2)[..., :, None] - cum.transpose(0, 1, 3, 2)[..., None, :])
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, None]
+    M = jnp.where(causal, CB * decay, 0.0) * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xc)
+
+    # per-chunk input states and cross-chunk recurrence
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", decay_out * dtc, Bc, xc)  # (B,nc,H,P,N)
+    T_c = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    s0 = jnp.zeros((Bb, H, Pd, N), f32) if init_state is None else init_state.astype(f32)
+
+    def chunk_step(s, inputs):
+        t_c, s_c = inputs                                 # (B,H), (B,H,P,N)
+        s_new = s * t_c[..., None, None] + s_c
+        return s_new, s                                   # emit state BEFORE this chunk
+
+    T_s = T_c.transpose(1, 0, 2)                          # (nc,B,H)
+    S_s = S_c.transpose(1, 0, 2, 3, 4)                    # (nc,B,H,P,N)
+    final_state, prev_states = jax.lax.scan(chunk_step, s0, (T_s, S_s))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,H,P,N)
+
+    decay_in = jnp.exp(cum)                               # (B,nc,Q,H)
+    y_off = jnp.einsum("bcihn,bchpn->bcihp", Cc, prev_states) * decay_in[..., None]
+
+    y = (y_diag + y_off).reshape(Bb, Lp, H, Pd)[:, :L]
+    return y, final_state
+
+
+def mamba_sublayer(
+    p: Dict[str, Any],
+    h,                      # normed (B, S, d)
+    cfg: ModelConfig,
+    ctx: RunCtx,
+    cache: Optional[Dict[str, Any]] = None,
+) -> Tuple[Any, Optional[Dict[str, Any]]]:
+    ssm = cfg.ssm
+    d_in, H, Pd = cfg.d_inner, cfg.ssm_heads, ssm.head_dim
+    G, N, K = ssm.n_groups, ssm.d_state, ssm.d_conv
+    B, S, _ = h.shape
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", h, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    if ctx.mode == "decode":
+        xbc_c, new_conv = _conv_step(xbc, cache["conv"], p["conv_w"], p["conv_b"])
+        xh = xbc_c[..., :d_in].reshape(B, H, Pd).astype(jnp.float32)
+        Bm = xbc_c[..., d_in : d_in + G * N].reshape(B, G, N).astype(jnp.float32)
+        Cm = xbc_c[..., d_in + G * N :].reshape(B, G, N).astype(jnp.float32)
+        Bm = jnp.repeat(Bm, H // G, axis=1)               # (B,H,N)
+        Cm = jnp.repeat(Cm, H // G, axis=1)
+        dt1 = dt[:, 0]                                    # (B,H)
+        dA = jnp.exp(dt1 * A[None, :])                    # (B,H)
+        state = cache["state"].astype(jnp.float32)
+        state = state * dA[..., None, None] + jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bm, xh)
+        y = jnp.einsum("bhn,bhpn->bhp", Cm, state)        # (B,H,P)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(B, 1, d_in)
+        new_cache = {"state": state, "conv": new_conv}
+    else:
+        xbc_c = _conv_full(xbc, p["conv_w"], p["conv_b"])
+        xh = xbc_c[..., :d_in].reshape(B, S, H, Pd)
+        Bm = xbc_c[..., d_in : d_in + G * N].reshape(B, S, G, N)
+        Cm = xbc_c[..., d_in + G * N :].reshape(B, S, G, N)
+        Bm = jnp.repeat(Bm, H // G, axis=2)
+        Cm = jnp.repeat(Cm, H // G, axis=2)
+        init_state = cache["state"] if (cache is not None and ctx.mode == "prefill") else None
+        y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk_size, init_state=init_state)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, d_in)
+        new_cache = cache
+        if cache is not None:                             # prefill: hand off state
+            tail = xbc[:, -(K - 1):, :]
+            if S < K - 1:
+                tail = jnp.pad(tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+            new_cache = {"state": final_state, "conv": tail.transpose(0, 2, 1)}
+
+    # gated RMSNorm + out projection
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype), p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, new_cache

@@ -1,0 +1,5 @@
+from repro.quant.quantize import (QuantizedLinear, dequantize_tree, kv_quantize,
+                                  kv_dequantize, quantize_params_int8)
+
+__all__ = ["QuantizedLinear", "quantize_params_int8", "dequantize_tree",
+           "kv_quantize", "kv_dequantize"]

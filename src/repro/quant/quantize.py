@@ -1,0 +1,73 @@
+"""Serving-time quantization (paper §4.1 Model Quantization).
+
+- weight-only int8 (per-output-channel absmax): halves weight HBM traffic vs
+  bf16 — the quantization that pays on v5e (no fp8 MXU; fp8 is storage-only,
+  see DESIGN.md). The Pallas w8a16 kernel consumes this format.
+- fp8 (e4m3) storage cast for comparison.
+- int8 KV-cache quantization (per-(token, head) absmax — KIVI-flavored
+  asymmetric-lite) for the memory-bound decode regime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedLinear(NamedTuple):
+    q: jnp.ndarray         # int8, same shape as the original weight
+    scale: jnp.ndarray     # f32, broadcastable over the quantized axis
+
+
+def _quant_leaf(w, axis: int = -1) -> QuantizedLinear:
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return QuantizedLinear(q=q, scale=scale.astype(jnp.float32))
+
+
+_QUANT_MIN_SIZE = 1 << 14   # only quantize big matmul weights
+
+
+def quantize_params_int8(params) -> Any:
+    """Quantize every large >=2D weight leaf to QuantizedLinear (int8 +
+    per-channel scale); small leaves (norms, biases) stay as-is."""
+    def one(w):
+        if hasattr(w, "ndim") and w.ndim >= 2 and w.size >= _QUANT_MIN_SIZE \
+                and jnp.issubdtype(w.dtype, jnp.floating):
+            return _quant_leaf(w)
+        return w
+    return jax.tree.map(one, params)
+
+
+def dequantize_tree(qparams, dtype=jnp.bfloat16):
+    def one(leaf):
+        return (leaf.q.astype(jnp.float32) * leaf.scale).astype(dtype) \
+            if isinstance(leaf, QuantizedLinear) else leaf
+    return jax.tree.map(one, qparams,
+                        is_leaf=lambda x: isinstance(x, QuantizedLinear))
+
+
+def fp8_cast_tree(params):
+    """fp8 (e4m3) storage cast — on v5e this is storage-only (dequant to bf16
+    before the MXU)."""
+    def one(w):
+        if hasattr(w, "ndim") and w.ndim >= 2 and jnp.issubdtype(w.dtype, jnp.floating):
+            return w.astype(jnp.float8_e4m3fn)
+        return w
+    return jax.tree.map(one, params)
+
+
+# ---------------------------------------------------------------- KV cache
+def kv_quantize(kv) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """kv (..., hd) -> (int8 kv, f32 scale (..., 1)): per-(position, head)."""
+    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def kv_dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

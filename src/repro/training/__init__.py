@@ -1,0 +1,5 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.training.train_step import TrainConfig, make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "TrainConfig", "make_train_step"]

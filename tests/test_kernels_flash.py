@@ -1,0 +1,74 @@
+"""Flash-attention kernel: shape/dtype sweep vs the pure-jnp oracle
+(pallas in interpret mode + the chunked-xla path)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, mha_chunked, mha_reference
+
+CASES = [
+    # B, Sq, Skv, H, Hkv, D, causal, window, softcap, q_offset
+    (2, 64, 64, 4, 2, 16, True, 0, 0.0, 0),
+    (1, 128, 128, 8, 8, 32, True, 0, 0.0, 0),       # MHA
+    (2, 64, 64, 4, 1, 16, True, 0, 0.0, 0),         # MQA
+    (1, 96, 96, 4, 2, 64, True, 32, 0.0, 0),        # sliding window
+    (1, 64, 64, 4, 4, 16, True, 0, 50.0, 0),        # softcap (gemma2)
+    (2, 32, 96, 2, 2, 16, True, 0, 0.0, 64),        # chunked-prefill offset
+    (2, 48, 48, 4, 2, 16, False, 0, 0.0, 0),        # encoder (non-causal)
+    (1, 80, 80, 4, 2, 16, True, 16, 30.0, 0),       # window + softcap
+]
+
+
+def _mk(rng, *shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_reference(rng, case, dtype):
+    B, Sq, Skv, H, Hkv, D, causal, window, softcap, qoff = case
+    q = _mk(rng, B, Sq, H, D, dtype=dtype)
+    k = _mk(rng, B, Skv, Hkv, D, dtype=dtype)
+    v = _mk(rng, B, Skv, Hkv, D, dtype=dtype)
+    ref = mha_reference(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=causal, window=window,
+                        softcap=softcap, q_offset=qoff)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap,
+                          q_offset=qoff, block_q=16, block_kv=32,
+                          backend="pallas", interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_chunked_matches_reference(rng, case):
+    B, Sq, Skv, H, Hkv, D, causal, window, softcap, qoff = case
+    q = _mk(rng, B, Sq, H, D, dtype=jnp.float32)
+    k = _mk(rng, B, Skv, Hkv, D, dtype=jnp.float32)
+    v = _mk(rng, B, Skv, Hkv, D, dtype=jnp.float32)
+    ref = mha_reference(q, k, v, causal=causal, window=window, softcap=softcap,
+                        q_offset=qoff)
+    out = mha_chunked(q, k, v, causal=causal, window=window, softcap=softcap,
+                      q_offset=qoff, block_q=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_unrolled_equals_scanned(rng):
+    q = _mk(rng, 2, 64, 4, 16, dtype=jnp.float32)
+    k = _mk(rng, 2, 64, 2, 16, dtype=jnp.float32)
+    v = _mk(rng, 2, 64, 2, 16, dtype=jnp.float32)
+    a = mha_chunked(q, k, v, block_q=16, block_kv=16, unroll=False)
+    b = mha_chunked(q, k, v, block_q=16, block_kv=16, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_ragged_block_sizes(rng):
+    """Sq/Skv not divisible by the block sizes (padding path)."""
+    q = _mk(rng, 1, 50, 4, 16, dtype=jnp.float32)
+    k = _mk(rng, 1, 70, 2, 16, dtype=jnp.float32)
+    v = _mk(rng, 1, 70, 2, 16, dtype=jnp.float32)
+    ref = mha_reference(q, k, v, causal=False)
+    out = flash_attention(q, k, v, causal=False, block_q=16, block_kv=32,
+                          backend="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,49 @@
+"""w8a16 quantized matmul kernel vs oracle + end-to-end quantization error."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quant_matmul import quantize_int8, w8a16_matmul, w8a16_matmul_reference
+from repro.quant import dequantize_tree, quantize_params_int8
+from repro.quant.quantize import kv_dequantize, kv_quantize
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (16, 64, 32, 8, 16, 32), (32, 128, 64, 16, 32, 64), (8, 32, 16, 8, 16, 16),
+])
+def test_w8a16_kernel(rng, M, K, N, bm, bn, bk):
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    wq, sc = quantize_int8(w)
+    ref = w8a16_matmul_reference(x, wq, sc)
+    out = w8a16_matmul(x, wq, sc, backend="pallas", interpret=True,
+                       block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3, rtol=1e-3)
+
+
+def test_quantization_error_bound(rng):
+    w = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    wq, sc = quantize_int8(w)
+    exact = x @ w
+    quant = w8a16_matmul_reference(x, wq, sc)
+    rel = float(jnp.max(jnp.abs(exact - quant)) / jnp.max(jnp.abs(exact)))
+    assert rel < 0.05, rel
+
+
+def test_params_tree_quantization(rng):
+    tree = {"big": jnp.asarray(rng.standard_normal((128, 256)), jnp.float32),
+            "small": jnp.ones((8,), jnp.float32)}
+    q = quantize_params_int8(tree)
+    assert q["big"].q.dtype == jnp.int8
+    assert q["small"].dtype == jnp.float32      # small leaves untouched
+    back = dequantize_tree(q, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back["big"] - tree["big"])))
+    assert rel < 0.05
+
+
+def test_kv_quant_roundtrip(rng):
+    kv = jnp.asarray(rng.standard_normal((3, 7, 2, 16)), jnp.float32)
+    q, s = kv_quantize(kv)
+    back = kv_dequantize(q, s)
+    assert float(jnp.max(jnp.abs(back - kv))) < 0.05

@@ -1,0 +1,58 @@
+"""Paged allocator property tests: no double-ownership, no leaks, capacity
+arithmetic — driven by random alloc/free traces (hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv_cache import OutOfPages, PagedAllocator
+
+
+def test_basic_alloc_free():
+    a = PagedAllocator(num_pages=17, page_size=4, max_pages_per_seq=8)
+    assert a.free_pages == 16
+    new = a.allocate(0, 9)          # 3 pages
+    assert len(new) == 3 and a.free_pages == 13
+    assert a.allocate(0, 10) == []  # still 3 pages
+    assert len(a.allocate(0, 13)) == 1
+    a.check_invariants()
+    assert a.free(0) == 4
+    assert a.free_pages == 16
+    a.check_invariants()
+
+
+def test_out_of_pages():
+    a = PagedAllocator(num_pages=5, page_size=4, max_pages_per_seq=8)
+    a.allocate(0, 12)               # 3 of 4 usable
+    with pytest.raises(OutOfPages):
+        a.allocate(1, 8)
+    a.check_invariants()
+
+
+def test_max_pages_per_seq():
+    a = PagedAllocator(num_pages=64, page_size=4, max_pages_per_seq=2)
+    with pytest.raises(OutOfPages):
+        a.allocate(0, 12)
+
+
+def test_page_table_row():
+    a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=4)
+    a.allocate(3, 7)
+    row = a.page_table_row(3)
+    assert row.shape == (4,)
+    assert (row[:2] > 0).all() and (row[2:] == 0).all()
+    assert 0 not in a.owned(3)      # null page never handed out
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 40),
+                          st.booleans()), min_size=1, max_size=60))
+def test_random_traces_keep_invariants(trace):
+    a = PagedAllocator(num_pages=24, page_size=4, max_pages_per_seq=10)
+    for slot, tokens, do_free in trace:
+        if do_free:
+            a.free(slot)
+        else:
+            try:
+                a.allocate(slot, tokens)
+            except OutOfPages:
+                pass
+        a.check_invariants()

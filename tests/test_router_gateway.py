@@ -1,0 +1,152 @@
+"""Router + gateway integration: policies, dynamic blueprint, failover with
+mid-stream resume, hedging, auth rejection end-to-end."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import tiny_config
+from repro.core import (EngineConfig, Gateway, InferenceEngine, Replica,
+                        ReplicaRouter, RouterConfig, baseline_gateway_config,
+                        scale_gateway_config)
+from repro.core.client import merge_engine_timestamps, run_workload
+from repro.core.metrics import Request
+from repro.core.safety import Authenticator
+from repro.data.workload import WorkloadSpec, sample_workload
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = tiny_config("qwen2.5-3b")
+    from repro.models import build_model
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _replica(model, params, rid, klass="default", **kw):
+    ekw = dict(max_slots=4, page_size=8, num_pages=128, max_seq=128,
+               prefill_bucket=16, greedy=True)
+    ekw.update(kw)
+    return Replica(rid, InferenceEngine(model, params, EngineConfig(**ekw)),
+                   klass=klass).start()
+
+
+def test_least_loaded_spreads(model_setup):
+    cfg, model, params = model_setup
+    reps = [_replica(model, params, f"r{i}") for i in range(3)]
+    router = ReplicaRouter(reps, RouterConfig(policy="round_robin"))
+    seen = set()
+    for i in range(6):
+        r = router.select()
+        seen.add(r.replica_id)
+        router._rr += 0
+    assert seen == {"r0", "r1", "r2"}
+    for r in reps:
+        r.stop()
+
+
+def test_dynamic_blueprint_policy(model_setup):
+    """Paper §6: < threshold -> high_tp class; >= threshold -> high_replica."""
+    cfg, model, params = model_setup
+    tp_rep = _replica(model, params, "bigtp", klass="high_tp")
+    small = [_replica(model, params, f"small{i}", klass="high_replica")
+             for i in range(2)]
+    router = ReplicaRouter([tp_rep] + small,
+                           RouterConfig(policy="dynamic", dynamic_threshold=4))
+    router._live = 0
+    assert router.select().klass == "high_tp"
+    router._live = 10
+    assert router.select().klass == "high_replica"
+    for r in [tp_rep] + small:
+        r.stop()
+
+
+def test_failover_resumes_inflight(model_setup):
+    cfg, model, params = model_setup
+
+    async def main():
+        reps = [_replica(model, params, f"f{i}") for i in range(2)]
+        router = ReplicaRouter(reps, RouterConfig(policy="round_robin"))
+        gw = Gateway(router, scale_gateway_config())
+        prompts, _ = sample_workload(WorkloadSpec(n_requests=8, vocab=cfg.vocab,
+                                                  scale=0.05, seed=2))
+
+        async def killer():
+            await asyncio.sleep(0.4)
+            router.handle_failure(reps[0])
+
+        res, _ = await asyncio.gather(
+            run_workload(gw, prompts, concurrency=4, max_new_tokens=12, timeout_s=60),
+            killer())
+        merge_engine_timestamps(res.requests, gw)
+        for r in reps:
+            r.stop()
+        return res, router
+
+    res, router = asyncio.run(main())
+    assert all(r.finished for r in res.requests)
+    assert all(len(r.generated) == 12 for r in res.requests)
+
+
+def test_gateway_auth_rejection(model_setup):
+    cfg, model, params = model_setup
+
+    async def main():
+        rep = _replica(model, params, "a0")
+        router = ReplicaRouter([rep])
+        auth = Authenticator(secret=b"s3cret")
+        gw = Gateway(router, scale_gateway_config(), auth=auth, require_auth=True)
+        prompts = [np.arange(1, 8, dtype=np.int32)] * 2
+        ok = await run_workload(gw, prompts, concurrency=2, max_new_tokens=4,
+                                auth_token=auth.issue("bob"))
+        bad = await run_workload(gw, prompts, concurrency=2, max_new_tokens=4,
+                                 auth_token="bob:forged")
+        rep.stop()
+        return ok, bad
+
+    ok, bad = asyncio.run(main())
+    assert all(r.finished for r in ok.requests)
+    assert all(r.error == "rejected" for r in bad.requests)
+
+
+def test_hedging_straggler(model_setup):
+    """A slow replica (large host overhead) gets hedged to a fast one."""
+    cfg, model, params = model_setup
+    slow = _replica(model, params, "slow", host_overhead_s=0.5)
+    fast = _replica(model, params, "fast")
+    router = ReplicaRouter([slow, fast],
+                           RouterConfig(policy="round_robin", hedge_after_s=0.3))
+    done = {}
+
+    def on_event(ev):
+        if ev.finished:
+            done["req"] = ev.request
+
+    req = Request(req_id="h1", prompt_tokens=np.arange(1, 8, dtype=np.int32),
+                  max_new_tokens=4)
+    # force primary = slow (round robin starts at index 0)
+    router.submit(req, on_event, replica=slow)
+    import time
+    deadline = time.time() + 20
+    while "req" not in done and time.time() < deadline:
+        time.sleep(0.05)
+    slow.stop()
+    fast.stop()
+    assert "req" in done
+    assert router.sink.snapshot().get("hedges", 0) >= 1
+
+
+def test_elastic_add_remove(model_setup):
+    cfg, model, params = model_setup
+    r0 = _replica(model, params, "e0")
+    router = ReplicaRouter([r0])
+    r1 = _replica(model, params, "e1")
+    router.add_replica(r1)
+    assert len(router.replicas) == 2
+    router.remove_replica("e0")
+    assert [r.replica_id for r in router.replicas] == ["e1"]
+    assert router.select().replica_id == "e1"
+    r0.stop()
+    r1.stop()

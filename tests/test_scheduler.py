@@ -1,0 +1,78 @@
+"""Continuous-batching scheduler: admission policies, pause/resume
+(max-utilization), static batching, slot hygiene."""
+import numpy as np
+
+from repro.core.kv_cache import PagedAllocator
+from repro.core.metrics import Request
+from repro.core.scheduler import ContinuousBatchScheduler
+
+
+def _req(i, n=8, max_new=4):
+    return Request(req_id=f"r{i}", prompt_tokens=np.arange(1, n + 1, dtype=np.int32),
+                   max_new_tokens=max_new)
+
+
+def _sched(policy="max_utilization", pages=16, slots=2):
+    alloc = PagedAllocator(num_pages=pages, page_size=4, max_pages_per_seq=16)
+    return ContinuousBatchScheduler(slots, alloc, policy=policy), alloc
+
+
+def test_admission_respects_slots():
+    s, _ = _sched(slots=2)
+    for i in range(4):
+        s.add(_req(i))
+    d = s.schedule()
+    assert len(d.admit) == 2
+    assert len(s.waiting) == 2
+    assert set(st.slot for st in d.admit) == {0, 1}
+
+
+def test_admission_respects_pages():
+    s, a = _sched(pages=5, slots=4)      # 4 usable pages
+    s.add(_req(0, n=8))                   # needs 3 (prompt+1)
+    s.add(_req(1, n=8))
+    d = s.schedule()
+    assert len(d.admit) == 1              # second would overflow pending pages
+
+
+def test_conservative_reserves_full_output():
+    s, _ = _sched(policy="conservative", pages=9, slots=4)
+    s.add(_req(0, n=8, max_new=24))       # needs (8+24)/4 = 8 pages
+    s.add(_req(1, n=8, max_new=24))
+    assert len(s.schedule().admit) == 1
+
+
+def test_static_waits_for_batch():
+    s, a = _sched(policy="static", pages=32, slots=2)
+    for i in range(3):
+        s.add(_req(i))
+    d = s.schedule()
+    assert len(d.admit) == 2
+    for st in d.admit:
+        a.allocate(st.slot, 8)
+        st.fed = 8
+    assert s.schedule().admit == []       # no refill mid-batch
+    s.finish(d.admit[0].slot)
+    assert s.schedule().admit == []       # still one running
+    s.finish(d.admit[1].slot)
+    assert len(s.schedule().admit) == 1   # fresh batch
+
+
+def test_preemption_pauses_latest_and_requeues():
+    s, a = _sched(pages=7, slots=3)       # 6 usable
+    for i in range(2):
+        s.add(_req(i, n=8))               # 2 pages each
+    d = s.schedule()
+    for st in d.admit:
+        a.allocate(st.slot, 8)
+        st.fed = 8
+    # burn remaining pages so growth must preempt
+    a.allocate(99, 8)
+    victim_order = max(st.order for st in s.running.values())
+    first = min(s.running.values(), key=lambda st: st.order)
+    ok = s.grow_for_decode(first.slot)
+    assert ok
+    assert len(s.running) == 1
+    assert s.waiting[0].preemptions == 1
+    assert s.n_preemptions == 1
+    a.check_invariants()

@@ -1,0 +1,84 @@
+"""Logical-axis sharding rules: divisibility fallback, axis-reuse exclusion,
+priority ordering (kv_heads over kv_seq) — property-tested."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (cache_partition_specs, make_rules,
+                                        param_partition_specs, partition_spec)
+from repro.launch.mesh import make_dev_mesh
+from repro.models.params import param_specs
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_dev_mesh(1, 1)
+
+
+class FakeMesh:
+    """Shape-only stand-in (no devices needed for spec computation)."""
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+M16 = FakeMesh({"data": 16, "model": 16})
+RULES = make_rules("serve", moe="ep")
+
+
+def test_divisible_heads_shard():
+    spec = partition_spec((4096, 32, 128), ("embed", "heads", "head_dim"), M16, RULES)
+    assert spec == P(None, "model", None)
+
+
+def test_indivisible_kv_heads_fall_back_to_seq():
+    # qwen cache: kv=2 can't shard 16-way -> kv_seq takes the model axis
+    spec = partition_spec((36, 128, 32768, 2, 128),
+                          ("layers", "batch", "kv_seq", "kv_heads", None), M16, RULES)
+    assert spec == P(None, "data", "model", None, None)
+
+
+def test_priority_kv_heads_beats_kv_seq():
+    spec = partition_spec((46, 128, 32768, 16, 128),
+                          ("layers", "batch", "kv_seq", "kv_heads", None), M16, RULES)
+    assert spec == P(None, "data", None, "model", None)
+
+
+def test_axis_never_reused():
+    rules = make_rules("train")
+    spec = partition_spec((16, 2048, 11008), ("experts", "embed", "mlp"),
+                          M16, make_rules("serve", moe="ep"))
+    used = [a for a in spec if a is not None]
+    assert len(set(used)) == len(used)
+
+
+def test_multi_pod_batch_uses_both_axes():
+    mesh3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = make_rules("train", multi_pod=True)
+    spec = partition_spec((256, 4096), ("batch", "seq"), mesh3, rules)
+    assert spec[0] == ("pod", "data")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 512), st.integers(1, 64), st.integers(1, 64))
+def test_spec_always_divides(dim0, dim1, dim2):
+    spec = partition_spec((dim0, dim1, dim2), ("batch", "heads", "mlp"), M16, RULES)
+    sizes = {"data": 16, "model": 16}
+    for d, entry in zip((dim0, dim1, dim2), spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert d % prod == 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "dbrx-132b", "mamba2-1.3b",
+                                  "jamba-v0.1-52b", "seamless-m4t-large-v2"])
+def test_param_specs_build_for_archs(arch):
+    cfg = get_config(arch)
+    tree = param_partition_specs(param_specs(cfg), M16, RULES)
+    for spec in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P)):
+        assert isinstance(spec, P)
