@@ -1,0 +1,30 @@
+"""Chunked-prefill perf trajectory: streaming TTFT / TPOT on the ScaleLLM
+endpoint at 8 / 32 / 64 concurrent requests with mixed prompt lengths.
+
+``run.py`` persists these rows to ``BENCH_prefill.json`` so later PRs have a
+baseline to regress against (acceptance gate for the chunked-prefill work:
+TTFT at high concurrency must not regress)."""
+from __future__ import annotations
+
+from benchmarks.common import row, run_endpoint
+
+CONCS = [8, 32, 64]
+
+
+def run(quick: bool = True):
+    rows = []
+    for c in CONCS:
+        n = min(2 * c, 24) if quick else 2 * c
+        s = run_endpoint("scalellm", "scale", concurrency=c, n_requests=n,
+                         max_new=10, timeout_s=120)
+        rows.append(row(
+            f"prefill.scalellm.c{c}.ttft",
+            s.mean["ttft_user"] * 1e6,
+            tpot_us=s.mean["tbt"] * 1e6,
+            p99_ttft_us=s.p99["ttft_user"] * 1e6,
+            throughput_tok_s=s.throughput_tok_s,
+            timeout_frac=s.timeout_frac,
+            concurrency=c,
+            n_requests=n,
+        ))
+    return rows

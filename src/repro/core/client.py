@@ -62,9 +62,10 @@ async def run_workload(
                 t = now()
                 if shadow.t5 == 0.0:
                     shadow.t5 = t
-                shadow.generated.append(token)
-                shadow.token_times.append(t)
-                n += 1
+                if token >= 0:             # < 0: terminal no-token sentinel
+                    shadow.generated.append(token)
+                    shadow.token_times.append(t)
+                    n += 1
                 if fin:
                     shadow.t6 = t
                     shadow.finished = True

@@ -1,15 +1,22 @@
-"""The inference engine: jitted prefill/decode over fixed batch-slot shapes,
-paged KV, continuous batching, temperature/top-p sampling.
+"""The inference engine: one jitted chunked iteration over fixed shapes,
+paged KV, continuous batching with a per-iteration token budget,
+temperature/top-p sampling.
 
-Design (TPU-native, runs for real on CPU):
-  - decode is ONE jitted function over (max_slots, 1) — slots that are empty
-    are masked; no recompilation ever happens during serving.
-  - prefill is jitted per power-of-two length bucket (a handful of compiles).
-  - prefill fills a fresh dense cache, which is then scattered into the paged
-    pool (jitted, donated) — pages for attention KV, slot-indexed pools for
-    SSM state / conv state / cross-attention memory.
+Design (TPU-native, runs for real on CPU; see DESIGN.md §2):
+  - prefill and decode are ONE model path (``LM.decode_chunk``): every batch
+    row feeds a chunk of tokens of one sequence whose KV is written straight
+    into the paged pool. Decode is a chunk of 1.
+  - two fixed call shapes, each compiled once: (chunk_rows, prefill_chunk)
+    for the prefill pack and (max_slots, 1) for the decode sweep. There is
+    no per-length bucket recompile ladder, no dense per-request prefill
+    cache, and no post-prefill scatter copy.
+  - each ``step()`` is a token-budget iteration (Sarathi-style): all pending
+    decode tokens plus up to ``token_budget - n_decode`` prefill-chunk
+    tokens. Long prompts prefill over several iterations, so an admitted
+    prompt never head-of-line blocks running decodes.
   - the scheduler's max-utilization policy pauses requests under page
-    pressure (see scheduler.py) and the engine re-prefills them on return.
+    pressure (see scheduler.py); a paused, partially-prefilled slot resumes
+    from chunk 0 with its generated tokens intact.
 
 ``host_overhead_s`` models engine-runtime software overhead per iteration and
 is used ONLY by the benchmark harness to represent baseline engines
@@ -17,16 +24,15 @@ is used ONLY by the benchmark harness to represent baseline engines
 """
 from __future__ import annotations
 
-import functools
 import time
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.kv_cache import PagedAllocator
 from repro.core.metrics import Request, now
 from repro.core.scheduler import ContinuousBatchScheduler, SlotState
@@ -39,7 +45,9 @@ class EngineConfig:
     page_size: int = 16
     num_pages: int = 512
     max_seq: int = 512
-    prefill_bucket: int = 32          # min prefill padding bucket
+    prefill_bucket: int = 32          # legacy knob: default for prefill_chunk
+    prefill_chunk: int = 0            # chunked-prefill size (0: prefill_bucket)
+    token_budget: int = 0             # per-iteration token cap (0: slots+2*chunk)
     temperature: float = 0.5
     top_p: float = 0.7
     greedy: bool = False
@@ -57,13 +65,15 @@ class EngineConfig:
 @dataclass
 class TokenEvent:
     request: Request
-    token: int
+    token: int                 # -1: terminal no-token event (rejected request)
     t_emit: float
     finished: bool
 
 
 # Module-level jit cache: replicas sharing a model reuse compiled programs
-# (a fleet of N replicas compiles once, not N times).
+# (a fleet of N replicas compiles once, not N times). jax.jit retraces per
+# call shape, so the two fixed shapes (chunk pack / decode sweep) coexist in
+# one entry.
 _JIT_CACHE: Dict[Tuple, Callable] = {}
 
 
@@ -97,88 +107,47 @@ class InferenceEngine:
         self.cfg = cfg
         self.ctx = ctx or RunCtx(attn_backend="xla", moe_strategy="dropless",
                                  block_q=128, block_kv=128)
+        cfgm = model.cfg
+        self.pos_offset = cfgm.vision.n_patches if cfgm.vision is not None else 0
+        self.chunk = min(cfg.prefill_chunk or max(cfg.prefill_bucket, 1), cfg.max_seq)
+        self.token_budget = max(cfg.token_budget or (cfg.max_slots + 2 * self.chunk),
+                                cfg.max_slots + 1)
+        self.chunk_rows = max(1, min(self.token_budget // self.chunk, cfg.max_slots))
         self.allocator = PagedAllocator(cfg.num_pages, cfg.page_size, cfg.max_pages_per_seq)
         self.scheduler = ContinuousBatchScheduler(
-            cfg.max_slots, self.allocator, policy=cfg.scheduler, max_seq=cfg.max_seq)
+            cfg.max_slots, self.allocator, policy=cfg.scheduler, max_seq=cfg.max_seq,
+            kv_extra=self.pos_offset)
         self.cache = model.init_cache(
             cfg.max_slots, cfg.max_seq, cfg.cache_dtype, kind="paged",
             page_size=cfg.page_size, num_pages=cfg.num_pages)
         self.page_table = np.zeros((cfg.max_slots, cfg.max_pages_per_seq), np.int32)
-        self.lengths = np.zeros((cfg.max_slots,), np.int32)
-        self.last_tokens = np.zeros((cfg.max_slots,), np.int32)
-        self.extras: Dict[str, Any] = {}  # frames/patches per slot (encdec/vlm)
+        self.extras: Dict[str, Any] = {}  # frames/patches per request (encdec/vlm)
         self._key = jax.random.PRNGKey(cfg.seed)
         sampling = (cfg.temperature, cfg.top_p, cfg.greedy, cfg.page_size)
-        self._decode_jit = _cached_jit(
-            "decode", model, self.ctx, sampling,
-            lambda: jax.jit(self._decode_fn, donate_argnums=(1,)))
-        self._prefill_jit = _cached_jit(
-            "prefill", model, self.ctx, sampling,
-            lambda: jax.jit(self._prefill_fn))
-        self._scatter_jit = _cached_jit(
-            "scatter", model, self.ctx, sampling,
-            lambda: jax.jit(self._scatter_fn, donate_argnums=(0,),
-                            static_argnames=("slot_pages",)))
+        self._step_jit = _cached_jit(
+            "step", model, self.ctx, sampling,
+            lambda: jax.jit(self._step_fn, donate_argnums=(1,)))
         self.steps = 0
         self.decode_tokens = 0
+        self.prefill_tokens = 0
+        self.iter_token_counts: deque = deque(maxlen=4096)
 
-    # ------------------------------------------------------------- jitted fns
-    def _decode_fn(self, params, cache, tokens, positions, page_table, lengths, key, active):
-        logits, cache = self.model.decode_step(
-            params, tokens, cache, positions, self.ctx,
-            page_table=page_table, lengths=lengths)
+    # ------------------------------------------------------------- jitted fn
+    def _step_fn(self, params, cache, tokens, starts, nvalid, slots, first,
+                 page_table, key, frames=None, patches=None):
+        """One fused iteration over a packed batch of per-sequence chunks
+        (decode == chunk of 1). Returns (next_token (B,), cache)."""
+        logits, cache = self.model.decode_chunk(
+            params, tokens, cache, starts, nvalid, slots, first, self.ctx,
+            page_table, frames=frames, patches=patches)
         nxt = sample_tokens(logits, key, self.cfg.temperature, self.cfg.top_p,
                             self.cfg.greedy)
-        return jnp.where(active, nxt, 0), cache
-
-    def _prefill_fn(self, params, batch, dense_cache, key, last_pos):
-        logits, dense_cache = self.model.prefill(params, batch, dense_cache,
-                                                 self.ctx, last_pos=last_pos)
-        nxt = sample_tokens(logits, key, self.cfg.temperature, self.cfg.top_p,
-                            self.cfg.greedy)
-        return nxt, dense_cache
-
-    def _scatter_fn(self, pool, dense, page_ids, slot, *, slot_pages: int):
-        """Move a (B=1, Spad) dense prefill cache into the paged pool at
-        `slot`. page_ids: (max_pages_per_seq,) physical ids (tail entries 0)."""
-        ps = self.cfg.page_size
-
-        def walk(pool_n, dense_n):
-            out = {}
-            for name, pv in pool_n.items():
-                dv = dense_n.get({"kp": "k", "vp": "v"}.get(name, name))
-                if isinstance(pv, dict):
-                    out[name] = walk(pv, dv)
-                elif name in ("kp", "vp"):
-                    src = dv[:, 0]                        # (R, W, Hkv, hd)
-                    R, W = src.shape[0], src.shape[1]
-                    npg = min(W // ps, slot_pages) if W >= ps else 0
-                    if npg > 0:
-                        blocks = src[:, : npg * ps].reshape(R, npg, ps, *src.shape[2:])
-                        out[name] = pv.at[:, page_ids[:npg]].set(blocks.astype(pv.dtype))
-                    else:
-                        out[name] = pv
-                elif name in ("state", "conv", "ck", "cv"):
-                    out[name] = pv.at[:, slot].set(dv[:, 0].astype(pv.dtype))
-                else:                                     # k/v/slot_pos unused in pool
-                    out[name] = pv
-            return out
-
-        new_groups = []
-        for g_pool, g_dense in zip(pool["groups"], dense["groups"]):
-            new_groups.append([walk(pp, dd) for pp, dd in zip(g_pool, g_dense)])
-        return {"groups": new_groups}
+        return jnp.where(nvalid > 0, nxt, 0), cache
 
     # ------------------------------------------------------------- helpers
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
         return k
-
-    def _bucket(self, n: int) -> int:
-        b = self.cfg.prefill_bucket
-        while b < n:
-            b *= 2
-        return min(b, self.cfg.max_seq)
 
     def submit(self, request: Request) -> None:
         self.scheduler.add(request)
@@ -186,119 +155,166 @@ class InferenceEngine:
     def has_work(self) -> bool:
         return self.scheduler.has_work()
 
-    # ------------------------------------------------------------- prefill
-    def _run_prefill(self, st: SlotState) -> Optional[int]:
-        """Prefill fed tokens for a slot; returns the first sampled token for
-        FRESH requests (None for resumed ones)."""
-        resumed = len(st.request.generated) > 0
-        feed = st.all_tokens[:-1] if resumed else st.all_tokens
-        L = len(feed)
-        Lp = self._bucket(L)
-        toks = np.zeros((1, Lp), np.int32)
-        toks[0, :L] = feed
-        batch = {"tokens": jnp.asarray(toks)}
+    def _row_extras(self, grants, B: int):
+        """Per-row encoder frames / vision patches operands for a chunk call
+        (fixed shapes; rows without extras get zeros, like the legacy dense
+        prefill did)."""
         cfgm = self.model.cfg
+        frames = patches = None
         if cfgm.encoder is not None:
-            batch["frames"] = self.extras.get(
-                (st.request.req_id, "frames"),
-                jnp.zeros((1, cfgm.encoder.cross_attn_memory, cfgm.d_model), jnp.float32))
+            M = cfgm.encoder.cross_attn_memory
+            fr = np.zeros((B, M, cfgm.d_model), np.float32)
+            for i, (st, _) in enumerate(grants):
+                v = self.extras.get((st.request.req_id, "frames"))
+                if v is not None:
+                    v = np.asarray(v)[0]
+                    m = min(M, v.shape[0])
+                    fr[i, :m] = v[:m]
+            frames = jnp.asarray(fr)
         if cfgm.vision is not None:
-            batch["patches"] = self.extras.get(
-                (st.request.req_id, "patches"),
-                jnp.zeros((1, cfgm.vision.n_patches, cfgm.vision.d_patch), jnp.float32))
-
-        dense = self.model.init_cache(
-            1, Lp, self.cfg.cache_dtype, kind="dense",
-            memory_len=cfgm.encoder.cross_attn_memory if cfgm.encoder else 0)
-        nxt, dense = self._prefill_jit(self.params, batch, dense, self._next_key(),
-                                       jnp.asarray([L - 1], jnp.int32))
-
-        # KV for positions >= L in the padded prefill is garbage, but pages
-        # only cover ceil(L/ps); attention masks by `lengths`, so it is inert.
-        self.allocator.allocate(st.slot, L)
-        row = self.allocator.page_table_row(st.slot)
-        self.page_table[st.slot] = row
-        n_pages = self.allocator.pages_needed(L)
-        self.cache = self._scatter_jit(self.cache, dense, jnp.asarray(row),
-                                       st.slot, slot_pages=n_pages)
-        self.lengths[st.slot] = L
-        st.fed = L
-        if resumed:
-            st.last_token = st.all_tokens[-1]
-            return None
-        tok = int(nxt[0])
-        st.last_token = tok
-        st.all_tokens.append(tok)
-        return tok
+            Np, Dp = cfgm.vision.n_patches, cfgm.vision.d_patch
+            pa = np.zeros((B, Np, Dp), np.float32)
+            for i, (st, _) in enumerate(grants):
+                v = self.extras.get((st.request.req_id, "patches"))
+                if v is not None:
+                    pa[i] = np.asarray(v)[0]
+            patches = jnp.asarray(pa)
+        return frames, patches
 
     # ------------------------------------------------------------- step
     def step(self) -> List[TokenEvent]:
-        """One engine iteration: admissions (prefill) + one decode sweep."""
+        """One token-budget iteration: admissions, the prefill chunk pack,
+        then one decode sweep — at most ``token_budget`` tokens total."""
         cfg = self.cfg
         events: List[TokenEvent] = []
         if cfg.host_overhead_s > 0:
             time.sleep(cfg.host_overhead_s)
         self.steps += 1
+        iter_tokens = 0
 
-        # ---- admissions
-        for st in self.scheduler.schedule().admit:
+        plan = self.scheduler.plan_iteration(self.token_budget, self.chunk,
+                                             self.chunk_rows)
+        for st in plan.admit:
             r = st.request
             if r.t2 == 0.0:
                 r.t2 = now()
             st.admitted_at = now()
-            tok = self._run_prefill(st)
-            if tok is not None:
-                r.generated.append(tok)
+            if st.feed_len + self.pos_offset >= cfg.max_seq:
+                # prompt can never fit max_seq: fail fast with zero tokens
+                # instead of spinning on page growth that cannot succeed.
+                # The terminal event is what tells replica/gateway consumers
+                # the request is over — without it they leak capacity.
+                self._finish(st)
+                events.append(TokenEvent(r, -1, now(), True))
+
+        # ---- prefill chunk pack: grow pages, then one fixed-shape call
+        grants: List[Tuple[SlotState, int]] = []
+        for st, n in plan.prefill:
+            if st.slot not in self.scheduler.running:      # preempted by an earlier grow
+                continue
+            if not self.scheduler.grow_for_tokens(st.slot, st.fed + n):
+                continue                                   # pages exhausted: slot waits
+            grants.append((st, n))
+        grants = [(st, n) for st, n in grants if st.slot in self.scheduler.running]
+        if grants:
+            B, C = self.chunk_rows, self.chunk
+            tokens = np.zeros((B, C), np.int32)
+            starts = np.zeros((B,), np.int32)
+            nvalid = np.zeros((B,), np.int32)
+            slots = np.zeros((B,), np.int32)
+            first = np.zeros((B,), bool)
+            pt = np.zeros((B, cfg.max_pages_per_seq), np.int32)
+            used = set()
+            for i, (st, n) in enumerate(grants):
+                tokens[i, :n] = st.all_tokens[st.fed:st.fed + n]
+                starts[i] = st.fed
+                nvalid[i] = n
+                slots[i] = st.slot
+                first[i] = st.fed == 0
+                row = self.allocator.page_table_row(st.slot)
+                self.page_table[st.slot] = row
+                pt[i] = row
+                used.add(st.slot)
+            # padding rows need distinct (unused) slots: their masked cache
+            # writes must never collide with a live row's slot
+            spare = [s for s in range(cfg.max_slots) if s not in used]
+            for i in range(len(grants), B):
+                slots[i] = spare.pop()
+            # encoder frames / vision patches only matter on a row's FIRST
+            # chunk (cross-KV is persisted per slot; the patch prefix KV is
+            # paged) — packs without first chunks skip the prefix compute.
+            frames, patches = (self._row_extras(grants, B) if first.any()
+                               else (None, None))
+            nxt, self.cache = self._step_jit(
+                self.params, self.cache, jnp.asarray(tokens), jnp.asarray(starts),
+                jnp.asarray(nvalid), jnp.asarray(slots), jnp.asarray(first),
+                jnp.asarray(pt), self._next_key(), frames, patches)
+            nxt = np.asarray(nxt)
+            t_emit = now()
+            for i, (st, n) in enumerate(grants):
+                st.fed += n
+                iter_tokens += n
+                self.prefill_tokens += n
+                if st.prefilling:
+                    continue                               # more chunks to go
+                if st.request.generated:                   # resumed mid-decode
+                    st.last_token = st.all_tokens[-1]
+                    continue
+                tok = int(nxt[i])                          # first generated token
+                st.last_token = tok
+                st.all_tokens.append(tok)
+                st.request.generated.append(tok)
                 fin = self._check_finished(st, tok)
-                events.append(TokenEvent(r, tok, now(), fin))
+                events.append(TokenEvent(st.request, tok, t_emit, fin))
                 if fin:
                     self._finish(st)
 
-        # ---- decode sweep
-        active_slots = [s for s, st in self.scheduler.running.items() if st.fed > 0]
-        if not active_slots:
-            return events
-        for s in list(active_slots):
-            if s not in self.scheduler.running:            # preempted by an earlier grow
-                active_slots.remove(s)
+        # ---- decode sweep: the plan's decode-ready set plus slots whose feed
+        # completed this iteration (same-step decode, budgeted as grant n+1)
+        def _live(st):
+            return self.scheduler.running.get(st.slot) is st
+        decode_sts = [st for st in plan.decode if _live(st) and st.last_token >= 0]
+        decode_sts += [st for st, _ in grants
+                       if _live(st) and not st.prefilling and st.last_token >= 0]
+        for st in list(decode_sts):
+            if st.slot not in self.scheduler.running:      # preempted by an earlier grow
+                decode_sts.remove(st)
                 continue
-            if not self.scheduler.grow_for_decode(s):
-                active_slots.remove(s)                     # paused/unschedulable
+            if not self.scheduler.grow_for_decode(st.slot):
+                decode_sts.remove(st)                      # paused/unschedulable
                 continue
-            self.page_table[s] = self.allocator.page_table_row(s)
-        # preemption may have removed slots
-        active_slots = [s for s in active_slots if s in self.scheduler.running]
-        if not active_slots:
+            self.page_table[st.slot] = self.allocator.page_table_row(st.slot)
+        decode_sts = [st for st in decode_sts if st.slot in self.scheduler.running]
+        if not decode_sts:
+            self.iter_token_counts.append(iter_tokens)
             return events
 
         M = cfg.max_slots
-        # inactive slots must point at the reserved null page 0: the jitted
-        # decode writes KV for every slot, and a stale row would corrupt pages
-        # that have been freed and reallocated to another sequence.
+        # inactive slots must point at the reserved null page 0: a stale row
+        # would alias pages freed and reallocated to another sequence.
         for s in range(M):
             if s not in self.scheduler.running:
                 self.page_table[s] = 0
         tokens = np.zeros((M, 1), np.int32)
-        positions = np.zeros((M,), np.int32)
-        active = np.zeros((M,), bool)
-        for s in active_slots:
-            st = self.scheduler.running[s]
-            tokens[s, 0] = st.last_token
-            positions[s] = st.fed
-            active[s] = True
-        lengths = jnp.asarray(np.where(active, positions + 1, np.maximum(self.lengths, 1)).astype(np.int32))
-        nxt, self.cache = self._decode_jit(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(self.page_table), lengths, self._next_key(), jnp.asarray(active))
+        starts = np.zeros((M,), np.int32)
+        nvalid = np.zeros((M,), np.int32)
+        for st in decode_sts:
+            tokens[st.slot, 0] = st.last_token
+            starts[st.slot] = st.fed
+            nvalid[st.slot] = 1
+        nxt, self.cache = self._step_jit(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(starts),
+            jnp.asarray(nvalid), jnp.asarray(np.arange(M, dtype=np.int32)),
+            jnp.asarray(np.zeros((M,), bool)), jnp.asarray(self.page_table),
+            self._next_key(), None, None)
         nxt = np.asarray(nxt)
         t_emit = now()
-        self.decode_tokens += len(active_slots)
+        self.decode_tokens += len(decode_sts)
+        iter_tokens += len(decode_sts)
 
-        for s in active_slots:
-            st = self.scheduler.running[s]
+        for st in decode_sts:
             st.fed += 1
-            self.lengths[s] = st.fed
-            tok = int(nxt[s])
+            tok = int(nxt[st.slot])
             st.last_token = tok
             st.all_tokens.append(tok)
             st.request.generated.append(tok)
@@ -306,6 +322,7 @@ class InferenceEngine:
             events.append(TokenEvent(st.request, tok, t_emit, fin))
             if fin:
                 self._finish(st)
+        self.iter_token_counts.append(iter_tokens)
         return events
 
     def _check_finished(self, st: SlotState, tok: int) -> bool:
@@ -314,27 +331,32 @@ class InferenceEngine:
             return True
         if self.cfg.eos_id >= 0 and tok == self.cfg.eos_id:
             return True
-        if st.fed + 1 >= self.cfg.max_seq:
-            return True
+        if st.fed + 1 + self.pos_offset >= self.cfg.max_seq:
+            return True                   # kv budget incl. any vision prefix
         return False
+
+    def _drop_extras(self, req_id: str) -> None:
+        self.extras.pop((req_id, "frames"), None)
+        self.extras.pop((req_id, "patches"), None)
 
     def _finish(self, st: SlotState) -> None:
         st.request.finished = True
         st.request.t3 = now()
         self.scheduler.finish(st.slot)
-        self.lengths[st.slot] = 0
+        self._drop_extras(st.request.req_id)
 
     def cancel(self, req_id: str) -> bool:
         """Drop a request (hedging loser / client disconnect). Frees its slot."""
         for i, r in enumerate(self.scheduler.waiting):
             if r.req_id == req_id:
                 del self.scheduler.waiting[i]
+                self._drop_extras(req_id)
                 return True
         for slot, st in list(self.scheduler.running.items()):
             if st.request.req_id == req_id:
                 self.scheduler.finish(slot)
-                self.lengths[slot] = 0
                 self.page_table[slot] = 0
+                self._drop_extras(req_id)
                 return True
         return False
 

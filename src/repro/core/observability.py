@@ -8,9 +8,19 @@ from collections import defaultdict
 from dataclasses import asdict
 from typing import Any, Dict, List, Optional
 
-import orjson
+try:                                    # orjson is optional (3-10x faster)
+    import orjson as _orjson
+except ImportError:                     # stdlib fallback keeps the module importable
+    _orjson = None
+    import json as _json
 
 from repro.core.metrics import Request, request_metrics
+
+
+def _dumps(obj: Any) -> bytes:
+    if _orjson is not None:
+        return _orjson.dumps(obj)
+    return _json.dumps(obj, default=str, separators=(",", ":")).encode()
 
 
 class MetricsSink:
@@ -28,14 +38,14 @@ class MetricsSink:
 
     def record_request(self, r: Request) -> None:
         m = request_metrics(r)
-        rec = orjson.dumps({"kind": "request", **asdict(m)})
+        rec = _dumps({"kind": "request", **asdict(m)})
         with self._lock:
             self._records.append(rec)
             self.counters["requests_completed"] += 1
             self.counters["tokens_generated"] += r.n_generated
 
     def record(self, kind: str, **fields: Any) -> None:
-        rec = orjson.dumps({"kind": kind, **fields})
+        rec = _dumps({"kind": kind, **fields})
         with self._lock:
             self._records.append(rec)
 

@@ -1,18 +1,26 @@
 """Iteration-level (continuous) batching scheduler with the paper's
-max-utilization policy.
+max-utilization policy and Sarathi-style token-budget iterations.
 
 Policies:
-  max_utilization  admit whenever a slot is free and the *prompt* fits in
-                   free pages — maximize tokens-in-flight per iteration; if
-                   pages run out mid-decode, PAUSE (preempt) the most recently
-                   admitted request, freeing its pages; it re-enters the head
-                   of the waiting queue and is re-prefilled later (the paper's
-                   "pausing requests if KV cache size limit is reached").
+  max_utilization  admit whenever a slot is free and the first prefill chunk
+                   fits in free pages — maximize tokens-in-flight per
+                   iteration; if pages run out mid-decode or mid-prefill,
+                   PAUSE (preempt) the most recently admitted request,
+                   freeing its pages; it re-enters the head of the waiting
+                   queue and is re-prefilled later (the paper's "pausing
+                   requests if KV cache size limit is reached").
   conservative     admit only if prompt + max_new_tokens worth of pages is
                    free — no preemption can ever be needed.
   static           classic static batching (the HF-endpoint baseline, Fig 2):
                    admit a batch only when the engine is idle, never refill
                    slots until every sequence in the batch finishes.
+
+Token-budget iterations (``plan_iteration``, DESIGN.md §2): every engine
+step packs all pending decode tokens plus prefill *chunks* up to a fixed
+per-iteration token budget. Long prompts prefill over several iterations
+(tracked by ``SlotState.fed`` vs ``SlotState.feed_len``), so an admitted
+prompt never stalls running decodes for its full length — the
+chunked-prefill fix for TTFT/TPOT interference.
 """
 from __future__ import annotations
 
@@ -32,9 +40,14 @@ class SlotState:
     request: Request
     all_tokens: List[int]          # prompt + generated
     fed: int = 0                   # tokens whose KV is in the cache
+    feed_len: int = 0              # tokens to feed before decoding can start
     last_token: int = -1           # sampled but not yet fed
     admitted_at: float = 0.0
     order: int = 0                 # admission sequence number (preemption victim choice)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < self.feed_len
 
 
 @dataclass
@@ -42,14 +55,27 @@ class Decisions:
     admit: List[SlotState] = field(default_factory=list)
 
 
+@dataclass
+class IterationPlan:
+    """One token-budget iteration: freshly admitted slots, prefill-chunk
+    grants (slot, n_tokens), and the decode-ready set. Token accounting:
+    sum of grant costs + len(decode) <= budget, where a grant that completes
+    a slot's feed costs n+1 (the slot decodes in the same iteration)."""
+    admit: List[SlotState] = field(default_factory=list)
+    prefill: List[Tuple[SlotState, int]] = field(default_factory=list)
+    decode: List[SlotState] = field(default_factory=list)
+
+
 class ContinuousBatchScheduler:
     def __init__(self, max_slots: int, allocator: PagedAllocator,
-                 policy: str = "max_utilization", max_seq: int = 4096):
+                 policy: str = "max_utilization", max_seq: int = 4096,
+                 kv_extra: int = 0):
         assert policy in ("max_utilization", "conservative", "static")
         self.max_slots = max_slots
         self.allocator = allocator
         self.policy = policy
         self.max_seq = max_seq
+        self.kv_extra = kv_extra       # per-seq kv prefix (e.g. VLM patches)
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, SlotState] = {}
         self._order = 0
@@ -69,15 +95,20 @@ class ContinuousBatchScheduler:
         return [s for s in range(self.max_slots) if s not in self.running]
 
     # ------------------------------------------------------------------
-    def _pages_for(self, req: Request, restored: int) -> int:
+    def _pages_for(self, req: Request, restored: int, chunk: int = 0) -> int:
         prompt_len = len(req.prompt_tokens) + restored
         if self.policy == "conservative":
             need = prompt_len + req.max_new_tokens
+        elif chunk > 0:
+            # chunked admission: only the first chunk (or whole short prompt
+            # + one decode token) must fit now; later chunks grow page by
+            # page with preemption backpressure.
+            need = min(prompt_len + 1, chunk)
         else:
             need = prompt_len + 1          # max utilization: prompt + headroom
-        return self.allocator.pages_needed(need)
+        return self.allocator.pages_needed(self.kv_extra + need)
 
-    def schedule(self) -> Decisions:
+    def schedule(self, chunk: int = 0) -> Decisions:
         d = Decisions()
         if self.policy == "static" and self.running:
             return d                        # static: wait for the whole batch
@@ -86,7 +117,7 @@ class ContinuousBatchScheduler:
         while self.waiting and free:
             req = self.waiting[0]
             restored = max(len(req.generated) - 1, 0)
-            need = self._pages_for(req, restored)
+            need = self._pages_for(req, restored, chunk)
             if need + pending_pages > self.allocator.free_pages:
                 break
             pending_pages += need
@@ -94,11 +125,43 @@ class ContinuousBatchScheduler:
             slot = free.pop(0)
             all_tokens = list(map(int, req.prompt_tokens)) + list(req.generated)
             st = SlotState(slot=slot, request=req, all_tokens=all_tokens,
+                           feed_len=len(all_tokens) - (1 if req.generated else 0),
                            order=self._order)
             self._order += 1
             self.running[slot] = st
             d.admit.append(st)
         return d
+
+    # ------------------------------------------------------------------
+    def plan_iteration(self, budget: int, chunk: int,
+                       max_chunk_rows: int) -> IterationPlan:
+        """Pack one engine iteration: every decode-ready slot contributes its
+        pending token; the remaining budget is granted to prefilling slots as
+        chunks of up to ``chunk`` tokens (at most ``max_chunk_rows`` rows,
+        the fixed shape of the engine's chunk call), oldest first."""
+        plan = IterationPlan()
+        plan.admit = self.schedule(chunk=chunk).admit
+        plan.decode = [st for st in self.running.values()
+                       if not st.prefilling and st.last_token >= 0]
+        spent = len(plan.decode)
+        prefilling = sorted((st for st in self.running.values() if st.prefilling),
+                            key=lambda st: st.order)
+        for st in prefilling:
+            if len(plan.prefill) >= max_chunk_rows:
+                break
+            left = budget - spent
+            if left <= 0:
+                break
+            n = min(chunk, st.feed_len - st.fed, left)
+            completes = n == st.feed_len - st.fed
+            if completes and n + 1 > left:
+                n -= 1                     # leave room for the same-step decode
+                completes = False
+            if n <= 0:
+                break
+            plan.prefill.append((st, n))
+            spent += n + (1 if completes else 0)
+        return plan
 
     # ------------------------------------------------------------------
     def preempt_one(self, protect: Optional[int] = None) -> Optional[int]:
@@ -119,16 +182,22 @@ class ContinuousBatchScheduler:
         self.allocator.free(slot)
         del self.running[slot]
 
-    def grow_for_decode(self, slot: int) -> bool:
-        """Ensure slot has a page for one more token; preempt others if the
-        policy allows. Returns False if the slot itself must pause."""
+    def grow_for_tokens(self, slot: int, n_tokens: int) -> bool:
+        """Ensure slot owns pages covering ``n_tokens`` kv entries (plus the
+        kv_extra prefix); preempt others if the policy allows. Returns False
+        if the slot itself must pause."""
         st = self.running[slot]
         while True:
             try:
-                self.allocator.allocate(slot, st.fed + 1)
+                self.allocator.allocate(slot, self.kv_extra + n_tokens)
                 return True
             except OutOfPages:
                 if self.policy != "max_utilization":
                     return False
                 if self.preempt_one(protect=slot) is None:
                     return False
+
+    def grow_for_decode(self, slot: int) -> bool:
+        """Ensure slot has a page for one more token; preempt others if the
+        policy allows. Returns False if the slot itself must pause."""
+        return self.grow_for_tokens(slot, self.running[slot].fed + 1)

@@ -1,4 +1,5 @@
-"""Public paged decode-attention op with pallas/xla dispatch.
+"""Public paged attention ops (decode + chunked prefill) with pallas/xla
+dispatch.
 
 The xla path (gather via page_table indexing) is what the CPU serving engine
 executes; the pallas path is the TPU target, validated in interpret mode.
@@ -6,9 +7,11 @@ executes; the pallas path is the TPU target, validated in interpret mode.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.paged_attention import kernel as _kernel
-from repro.kernels.paged_attention.ref import paged_attention_reference
+from repro.kernels.paged_attention.ref import (chunked_prefill_reference,
+                                               paged_attention_reference)
 
 
 def _on_tpu() -> bool:
@@ -36,5 +39,36 @@ def paged_attention(
         interpret = not _on_tpu()
     return _kernel.paged_attention_pallas(
         q, k_pages, v_pages, page_table, lengths,
+        scale=scale, softcap=softcap, window=window, interpret=interpret,
+    )
+
+
+def chunked_prefill_attention(
+    q, k_pages, v_pages, page_table, lengths, q_positions, *,
+    scale: float | None = None, softcap: float = 0.0, window: int = 0,
+    backend: str = "auto", interpret: bool | None = None,
+):
+    """Chunked paged prefill: q (B, C, H, D) at absolute q_positions (B, C)
+    attends causally over the pool (the chunk's own KV included).
+
+    The pallas kernel assumes the positions of a row are contiguous
+    (``q_positions[b, i] == q_positions[b, 0] + i`` — true for every
+    engine-issued chunk); callers with non-affine positions (e.g. a VLM
+    patch-prefix row) must use the xla path.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return chunked_prefill_reference(
+            q, k_pages, v_pages, page_table, lengths, q_positions,
+            scale=scale, softcap=softcap, window=window,
+        )
+    if interpret is None:
+        interpret = not _on_tpu()
+    starts = q_positions[:, 0].astype(jnp.int32)
+    return _kernel.chunked_prefill_pallas(
+        q, k_pages, v_pages, page_table, lengths, starts,
         scale=scale, softcap=softcap, window=window, interpret=interpret,
     )

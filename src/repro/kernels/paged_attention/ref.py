@@ -1,12 +1,18 @@
-"""Oracle for paged decode attention.
+"""Oracles for paged attention.
 
-q:          (B, H, D)         one new query token per sequence
-k_pages:    (P, page_size, Hkv, D)   global physical page pool
-v_pages:    (P, page_size, Hkv, D)
-page_table: (B, max_pages)    int32 physical page id per logical page
-lengths:    (B,)              valid kv entries per sequence (incl. current)
+Decode (one query token per sequence):
+  q:          (B, H, D)
+  k_pages:    (P, page_size, Hkv, D)   global physical page pool
+  v_pages:    (P, page_size, Hkv, D)
+  page_table: (B, max_pages)    int32 physical page id per logical page
+  lengths:    (B,)              valid kv entries per sequence (incl. current)
 
-Returns (B, H, D).
+Chunked prefill (a chunk of S query tokens per sequence, causal against the
+KV already resident in the pool — which includes the chunk's own KV, written
+by the caller before attending):
+  q:           (B, S, H, D)
+  q_positions: (B, S) int32    absolute position of each query token
+  lengths:     (B,)            total resident kv entries (incl. this chunk)
 """
 from __future__ import annotations
 
@@ -40,4 +46,42 @@ def paged_attention_reference(
     p = jnp.where(mask[:, None, :], p, 0.0)
     denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     out = jnp.einsum("bhk,bkhd->bhd", (p / denom).astype(jnp.float32), v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_prefill_reference(
+    q, k_pages, v_pages, page_table, lengths, q_positions, *,
+    scale=None, softcap: float = 0.0, window: int = 0,
+):
+    """Gather-based oracle for chunked paged prefill. Returns (B, S, H, D).
+
+    Query token i of row b sits at absolute position q_positions[b, i] and
+    attends causally to kv positions <= q_positions[b, i] (clipped to
+    lengths[b]); rows where q_positions is past lengths produce zeros."""
+    B, S, H, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    group = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    k = k_pages[page_table].reshape(B, maxp * ps, Hkv, D)
+    v = v_pages[page_table].reshape(B, maxp * ps, Hkv, D)
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    s = jnp.einsum("bshd,bkhd->bhsk", q, k, preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_pos = jnp.arange(maxp * ps)[None, None, :]          # (1, 1, K)
+    q_pos = q_positions[:, :, None]                        # (B, S, 1)
+    mask = (kv_pos < lengths[:, None, None]) & (kv_pos <= q_pos)
+    if window > 0:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[:, None], s, -1e30)                 # (B, H, S, K)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[:, None], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhsk,bkhd->bshd", (p / denom).astype(jnp.float32),
+                     v.astype(jnp.float32))
     return out.astype(q.dtype)

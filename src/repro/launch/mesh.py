@@ -12,10 +12,16 @@ paper's EP/TP sweep.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                           # jax >= 0.4.35
+    from jax.sharding import AxisType
+except ImportError:            # older jax: meshes are Auto-typed already
+    AxisType = None
 
 
 def _mk(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
 
 

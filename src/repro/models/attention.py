@@ -1,5 +1,6 @@
-"""GQA attention sublayer: train / prefill / decode (dense ring-buffer cache or
-paged cache) / cross-attention. One code path per mode, shared projections.
+"""GQA attention sublayer: train / prefill / chunk (paged serving) / decode
+(dense ring-buffer cache or paged cache) / cross-attention. One code path per
+mode, shared projections.
 
 Cache formats (per layer, unstacked — the scan adds the leading layers dim):
   dense: {"k": (B, W, Hkv, hd), "v": ..., "slot_pos": (B, W) int32}
@@ -8,6 +9,14 @@ Cache formats (per layer, unstacked — the scan adds the leading layers dim):
          (slot == position) through the same code.
   paged: {"kp": (P, ps, Hkv, hd), "vp": ...} + engine-level page_table/lengths.
   cross: {"ck": (B, M, Hkv, hd), "cv": ...} built once at prefill.
+
+Mode "chunk" is the serving engine's unified iteration (DESIGN.md §2): each
+batch row carries a chunk of S tokens of one sequence (S == 1 is decode); KV
+is written straight into the paged pool (no dense intermediate) and queries
+attend causally over the pool, which already contains the chunk itself.
+``chunk`` carries {"slots", "nvalid", "first", "valid"} — the engine-slot id,
+the per-row count of live tokens, whether this is the row's first chunk, and
+the per-position validity mask (invalid positions write to null page 0).
 """
 from __future__ import annotations
 
@@ -18,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (chunked_prefill_attention,
+                                           paged_attention)
 from repro.models.common import RunCtx, rope, shard_act
 
 
@@ -92,6 +102,27 @@ def _write_paged(cache, k, v, positions, page_table):
     }
 
 
+def _write_paged_chunk(cache, k, v, positions, page_table, valid):
+    """Scatter a whole chunk's KV into the paged pool in one shot.
+
+    k/v (B, S, Hkv, hd); positions (B, S) absolute; valid (B, S). Invalid
+    positions are routed to the reserved null page 0 (the allocator never
+    hands it out), so one fixed-shape scatter serves ragged chunks."""
+    ps = cache["kp"].shape[1]
+    B, S = positions.shape
+    maxp = page_table.shape[1]
+    logical = jnp.clip(positions // ps, 0, maxp - 1)
+    phys = jnp.where(valid, jnp.take_along_axis(page_table, logical, axis=1), 0)
+    slot = positions % ps
+    pf, sf = phys.reshape(-1), slot.reshape(-1)
+    kf = k.reshape(B * S, *k.shape[2:]).astype(cache["kp"].dtype)
+    vf = v.reshape(B * S, *v.shape[2:]).astype(cache["vp"].dtype)
+    return {
+        "kp": cache["kp"].at[pf, sf].set(kf),
+        "vp": cache["vp"].at[pf, sf].set(vf),
+    }
+
+
 def attention_sublayer(
     p: Dict[str, Any],
     h,                       # normed input (B, S, d)
@@ -99,10 +130,12 @@ def attention_sublayer(
     cfg: ModelConfig,
     kind: str,               # 'A' | 'L' | 'G' | 'X' (cross) | 'E' (encoder, bidirectional)
     cache: Optional[Dict[str, Any]] = None,
-    positions=None,          # decode: (B,) abs position of the new token; prefill: (S,)
+    positions=None,          # decode: (B,) abs position of the new token;
+                             # prefill: (S,); chunk: (B, S) absolute
     memory=None,             # cross: encoder output (B, M, d)
     page_table=None,
     lengths=None,
+    chunk=None,              # chunk mode: {"slots", "nvalid", "first", "valid"}
 ):
     """Returns (attn_out (B,S,d), new_cache)."""
     window = cfg.sliding_window if kind == "L" else 0
@@ -113,7 +146,26 @@ def attention_sublayer(
     # ---------------- cross attention ----------------
     if kind == "X":
         q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
-        if cache is not None and ctx.mode == "decode":
+        if ctx.mode == "chunk":
+            # slot-pooled cross cache: rows map to engine slots. With encoder
+            # memory supplied (prefill chunks) recompute ck/cv and persist
+            # them at the row's slot; without (decode sweep) read the slot.
+            slots, row_valid = chunk["slots"], chunk["nvalid"] > 0
+            if memory is not None:
+                ck = jnp.einsum("bmd,dnk->bmnk", memory, p["wk"])
+                cv = jnp.einsum("bmd,dnk->bmnk", memory, p["wv"])
+                new_cache = {
+                    "ck": cache["ck"].at[slots].set(
+                        jnp.where(row_valid[:, None, None, None],
+                                  ck.astype(cache["ck"].dtype), cache["ck"][slots])),
+                    "cv": cache["cv"].at[slots].set(
+                        jnp.where(row_valid[:, None, None, None],
+                                  cv.astype(cache["cv"].dtype), cache["cv"][slots])),
+                }
+            else:
+                ck, cv = cache["ck"][slots], cache["cv"][slots]
+                new_cache = cache
+        elif cache is not None and ctx.mode == "decode":
             ck, cv = cache["ck"], cache["cv"]
             new_cache = cache
         else:
@@ -128,6 +180,23 @@ def attention_sublayer(
         return _out_proj(p, o), new_cache
 
     q, k, v = _project_qkv(p, h, cfg)
+
+    if ctx.mode == "chunk" and kind != "E":   # encoder runs full-seq below
+        # serving chunk: write this chunk's KV straight into the paged pool,
+        # then attend causally over the pool (history + the chunk itself).
+        # Rows carrying a vision patch prefix have non-affine positions,
+        # which the pallas kernel cannot represent — force the xla gather.
+        backend = "xla" if chunk.get("prefix") else ctx.attn_backend
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        new_cache = _write_paged_chunk(cache, k, v, positions, page_table,
+                                       chunk["valid"])
+        o = chunked_prefill_attention(
+            q, new_cache["kp"], new_cache["vp"], page_table, lengths, positions,
+            scale=scale, softcap=softcap, window=window,
+            backend=backend, interpret=ctx.interpret,
+        )
+        return _out_proj(p, o), new_cache
 
     if ctx.mode == "decode":
         q = rope(q, positions[:, None], cfg.rope_theta)   # (B,1,...)

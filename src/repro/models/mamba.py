@@ -49,6 +49,25 @@ def _conv_step(xbc_new, conv_state, conv_w, conv_b):
     return out[:, None, :], window[..., 1:]
 
 
+def _conv_carry(xbc, conv_state, conv_w, conv_b):
+    """Causal conv continuing from a carried tail. xbc (B,S,C); conv_state
+    (B,C,K-1) holds the K-1 inputs preceding the chunk (zeros at sequence
+    start). Returns (out (B,S,C), window (B, K-1+S, C)) — the window is
+    reused by the caller to slice the next carry at a ragged boundary."""
+    B, S, C = xbc.shape
+    K = conv_w.shape[-1]
+    window = jnp.concatenate([conv_state.transpose(0, 2, 1).astype(xbc.dtype), xbc],
+                             axis=1)                       # (B, K-1+S, C)
+    lhs = window.transpose(0, 2, 1)                        # (B, C, K-1+S)
+    rhs = conv_w[:, None, :]                               # (C, 1, K)
+    out = jax.lax.conv_general_dilated(
+        lhs.astype(jnp.float32), rhs.astype(jnp.float32),
+        window_strides=(1,), padding="VALID", feature_group_count=C,
+    )
+    out = out.transpose(0, 2, 1) + conv_b[None, None, :]
+    return jax.nn.silu(out).astype(xbc.dtype), window
+
+
 def ssd_chunked(x, dt, A, B_, C, chunk: int, init_state=None):
     """x (B,L,H,P); dt (B,L,H) post-softplus; A (H,) negative; B_/C (B,L,H,N).
     Returns (y (B,L,H,P), final_state (B,H,P,N))."""
@@ -104,12 +123,31 @@ def ssd_chunked(x, dt, A, B_, C, chunk: int, init_state=None):
     return y, final_state
 
 
+def _ssm_decode_update(xbc_c, dt1, A, p, state, cfg: ModelConfig):
+    """One-token SSD state update. xbc_c (B,1,conv_dim) post-conv; dt1 (B,H);
+    state (B,H,P,N) f32. Returns (y (B,1,d_inner) f32, new_state f32)."""
+    d_in, H, Pd = cfg.d_inner, cfg.ssm_heads, cfg.ssm.head_dim
+    G, N = cfg.ssm.n_groups, cfg.ssm.d_state
+    B = xbc_c.shape[0]
+    xh = xbc_c[:, 0, :d_in].reshape(B, H, Pd).astype(jnp.float32)
+    Bm = xbc_c[:, 0, d_in : d_in + G * N].reshape(B, G, N).astype(jnp.float32)
+    Cm = xbc_c[:, 0, d_in + G * N :].reshape(B, G, N).astype(jnp.float32)
+    Bm = jnp.repeat(Bm, H // G, axis=1)                   # (B,H,N)
+    Cm = jnp.repeat(Cm, H // G, axis=1)
+    dA = jnp.exp(dt1 * A[None, :])                        # (B,H)
+    state = state * dA[..., None, None] + jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bm, xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, state)            # (B,H,P)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    return y.reshape(B, 1, d_in), state
+
+
 def mamba_sublayer(
     p: Dict[str, Any],
     h,                      # normed (B, S, d)
     cfg: ModelConfig,
     ctx: RunCtx,
     cache: Optional[Dict[str, Any]] = None,
+    chunk: Optional[Dict[str, Any]] = None,
 ) -> Tuple[Any, Optional[Dict[str, Any]]]:
     ssm = cfg.ssm
     d_in, H, Pd = cfg.d_inner, cfg.ssm_heads, ssm.head_dim
@@ -121,20 +159,48 @@ def mamba_sublayer(
     A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
 
-    if ctx.mode == "decode":
+    if ctx.mode == "chunk":
+        # serving chunk over the slot-pooled cache: rows map to engine slots,
+        # first chunks start from zero state, ragged tails are masked via dt
+        # (dt == 0 => exp(dt*A) == 1 and zero input: the state is untouched).
+        slots, nvalid, first = chunk["slots"], chunk["nvalid"], chunk["first"]
+        row_valid = nvalid > 0
+        s_orig = cache["state"][slots]
+        c_orig = cache["conv"][slots]
+        s0 = jnp.where(first[:, None, None, None], 0.0, s_orig.astype(jnp.float32))
+        c0 = jnp.where(first[:, None, None], jnp.zeros_like(c_orig), c_orig)
+        if S == 1:                                        # decode: O(1) update
+            xbc_c, conv_new = _conv_step(xbc, c0, p["conv_w"], p["conv_b"])
+            y, state_new = _ssm_decode_update(xbc_c, dt[:, 0], A, p, s0, cfg)
+        else:
+            xbc_c, window = _conv_carry(xbc, c0, p["conv_w"], p["conv_b"])
+            xh = xbc_c[..., :d_in].reshape(B, S, H, Pd)
+            Bm = xbc_c[..., d_in : d_in + G * N].reshape(B, S, G, N)
+            Cm = xbc_c[..., d_in + G * N :].reshape(B, S, G, N)
+            Bm = jnp.repeat(Bm, H // G, axis=2)
+            Cm = jnp.repeat(Cm, H // G, axis=2)
+            dtm = jnp.where(jnp.arange(S)[None, :, None] < nvalid[:, None, None],
+                            dt, 0.0)
+            y, state_new = ssd_chunked(xh, dtm, A, Bm, Cm, ssm.chunk_size,
+                                       init_state=s0)
+            y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+            y = y.reshape(B, S, d_in)
+            # next carry: the K-1 inputs preceding each row's ragged end
+            idx = nvalid[:, None] + jnp.arange(K - 1)[None]
+            conv_new = jnp.take_along_axis(window, idx[..., None], axis=1
+                                           ).transpose(0, 2, 1)
+        new_cache = {
+            "state": cache["state"].at[slots].set(
+                jnp.where(row_valid[:, None, None, None],
+                          state_new.astype(cache["state"].dtype), s_orig)),
+            "conv": cache["conv"].at[slots].set(
+                jnp.where(row_valid[:, None, None],
+                          conv_new.astype(cache["conv"].dtype), c_orig)),
+        }
+    elif ctx.mode == "decode":
         xbc_c, new_conv = _conv_step(xbc, cache["conv"], p["conv_w"], p["conv_b"])
-        xh = xbc_c[..., :d_in].reshape(B, H, Pd).astype(jnp.float32)
-        Bm = xbc_c[..., d_in : d_in + G * N].reshape(B, G, N).astype(jnp.float32)
-        Cm = xbc_c[..., d_in + G * N :].reshape(B, G, N).astype(jnp.float32)
-        Bm = jnp.repeat(Bm, H // G, axis=1)               # (B,H,N)
-        Cm = jnp.repeat(Cm, H // G, axis=1)
-        dt1 = dt[:, 0]                                    # (B,H)
-        dA = jnp.exp(dt1 * A[None, :])                    # (B,H)
-        state = cache["state"].astype(jnp.float32)
-        state = state * dA[..., None, None] + jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bm, xh)
-        y = jnp.einsum("bhn,bhpn->bhp", Cm, state)        # (B,H,P)
-        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
-        y = y.reshape(B, 1, d_in)
+        y, state = _ssm_decode_update(xbc_c, dt[:, 0], A, p,
+                                      cache["state"].astype(jnp.float32), cfg)
         new_cache = {"state": state, "conv": new_conv}
     else:
         xbc_c = _conv_full(xbc, p["conv_w"], p["conv_b"])

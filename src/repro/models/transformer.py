@@ -42,7 +42,7 @@ class LM:
 
     # ------------------------------------------------------------------ layers
     def _apply_layer(self, p, x, c, *, kind: str, ctx: RunCtx,
-                     positions, memory, page_table, lengths):
+                     positions, memory, page_table, lengths, chunk=None):
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
         new_c: Dict[str, Any] = {} if c is not None else None
@@ -55,14 +55,16 @@ class LM:
         h = rmsnorm(x, p["ln1"], cfg.rms_eps)
         if kind == "M":
             sub, cm = mamba_sublayer(p["ssm"], h, cfg, ctx,
-                                     cache=c.get("ssm") if c else None)
+                                     cache=c.get("ssm") if c else None,
+                                     chunk=chunk)
             if new_c is not None:
                 new_c["ssm"] = cm
         else:
             sub, ca = attention_sublayer(
                 p["attn"], h, ctx, cfg, kind,
                 cache=c.get("attn") if c else None,
-                positions=positions, page_table=page_table, lengths=lengths)
+                positions=positions, page_table=page_table, lengths=lengths,
+                chunk=chunk)
             if new_c is not None and ca is not None:
                 new_c["attn"] = ca
         x = x + shard_act(sub, seq_sharded)
@@ -71,7 +73,7 @@ class LM:
             hx = rmsnorm(x, p["ln_x"], cfg.rms_eps)
             sub, cx = attention_sublayer(
                 p["cross"], hx, ctx, cfg, "X",
-                cache=c.get("cross") if c else None, memory=memory)
+                cache=c.get("cross") if c else None, memory=memory, chunk=chunk)
             if new_c is not None and cx is not None:
                 new_c["cross"] = cx
             x = x + shard_act(sub, seq_sharded)
@@ -87,7 +89,7 @@ class LM:
 
     def _run_groups(self, groups_params, x, cache, *, ctx: RunCtx, layer_groups,
                     positions=None, memory=None, page_table=None, lengths=None,
-                    kinds_override: Optional[str] = None):
+                    kinds_override: Optional[str] = None, chunk=None):
         """Scan each layer group. Returns (x, new_cache, aux_sum)."""
         aux_total = jnp.zeros((), jnp.float32)
         new_groups_cache: List[Any] = []
@@ -111,7 +113,8 @@ class LM:
                             return self._apply_layer(
                                 pp, xx, cc, kind=kind, ctx=ctx,
                                 positions=positions, memory=memory,
-                                page_table=page_table, lengths=lengths)
+                                page_table=page_table, lengths=lengths,
+                                chunk=chunk)
 
                         if ctx.remat:
                             run_layer = jax.checkpoint(run_layer)
@@ -137,7 +140,7 @@ class LM:
                     xcur, cnew, aux = self._apply_layer(
                         p_sl[pos], xcur, cpos, kind=kind, ctx=ctx,
                         positions=positions, memory=memory,
-                        page_table=page_table, lengths=lengths)
+                        page_table=page_table, lengths=lengths, chunk=chunk)
                     # residual stream seq-sharded between layers under the
                     # sequence-parallel rules (no-op otherwise)
                     xcur = shard_act(xcur, ("batch", "seq", None))
@@ -283,6 +286,69 @@ class LM:
         else:
             last = jnp.take_along_axis(x, (last_pos + offset)[:, None, None], axis=1)
         logits = self._head(params, last)
+        return logits[:, 0], new_cache
+
+    def decode_chunk(self, params, tokens, cache, starts, nvalid, slots, first,
+                     ctx: RunCtx, page_table, frames=None, patches=None):
+        """Unified serving iteration over a paged cache (DESIGN.md §2): each
+        batch row feeds a chunk of up to C tokens of one sequence — C == 1 is
+        decode, C > 1 is a prefill chunk. KV goes straight into the paged
+        pool; there is no dense intermediate cache and no scatter copy.
+
+        tokens (B, C); starts (B,) absolute position of each row's first
+        token (pre-vision-offset); nvalid (B,) live tokens per row (0 =
+        inactive row); slots (B,) engine slot per row (must be distinct);
+        first (B,) True on a sequence's first chunk (resets SSM/conv state);
+        page_table (B, max_pages); frames (B, M, d) raw encoder frames for
+        encdec prefill chunks (encoded here, cross-KV persisted per slot);
+        patches (B, n_patches, d_patch) for VLM chunk calls —
+        the patch prefix is embedded into rows with starts == 0 and its KV
+        occupies kv positions [0, n_patches).
+
+        Returns (logits (B, vocab) at each row's last valid position,
+        new_cache).
+        """
+        cfg = self.cfg
+        if cfg.vision is not None and any("M" in g.pattern for g in cfg.layer_groups):
+            # SSM chunk masking is indexed by nvalid over the token axis and
+            # would treat a patch prefix as live tokens — refuse loudly
+            # rather than corrupt state (no current config hits this).
+            raise NotImplementedError(
+                "chunk mode: vision patch prefix + SSM layers is unsupported")
+        ctx = ctx.with_mode("chunk")
+        B, C = tokens.shape
+        x = params["embed"]["w"][tokens]
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        offset = cfg.vision.n_patches if cfg.vision is not None else 0
+        positions = offset + starts[:, None] + jnp.arange(C)[None, :]
+        valid = jnp.arange(C)[None, :] < nvalid[:, None]
+        n_prefix = 0
+        if cfg.vision is not None and patches is not None:
+            proj = (jnp.einsum("bpk,kd->bpd", patches.astype(x.dtype),
+                               params["vision_proj"]["w"].astype(x.dtype))
+                    + params["vision_proj"]["b"].astype(x.dtype))
+            n_prefix = proj.shape[1]
+            x = jnp.concatenate([proj, x], axis=1)
+            pre_pos = jnp.broadcast_to(jnp.arange(n_prefix)[None, :], (B, n_prefix))
+            pre_valid = jnp.broadcast_to(((starts == 0) & (nvalid > 0))[:, None],
+                                         (B, n_prefix))
+            positions = jnp.concatenate([pre_pos, positions], axis=1)
+            valid = jnp.concatenate([pre_valid, valid], axis=1)
+        lengths = offset + starts + nvalid
+        memory = None
+        if cfg.encoder is not None and frames is not None:
+            memory = self._encode(params, frames.astype(x.dtype), ctx)
+        pack = {"slots": slots, "nvalid": nvalid, "first": first, "valid": valid,
+                "prefix": n_prefix > 0}
+        x, new_cache, _ = self._run_groups(
+            params["groups"], x, cache, ctx=ctx, layer_groups=cfg.layer_groups,
+            positions=positions, memory=memory, page_table=page_table,
+            lengths=lengths, chunk=pack)
+        x = rmsnorm(x, params["final_norm"]["w"], cfg.rms_eps)
+        last = n_prefix + jnp.maximum(nvalid, 1) - 1
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        logits = self._head(params, x_last)
         return logits[:, 0], new_cache
 
     def decode_step(self, params, tokens, cache, positions, ctx: RunCtx,

@@ -1,0 +1,240 @@
+"""Chunked paged prefill (DESIGN.md §2): kernel oracle equivalence, chunked
+== dense prefill logits across chunk sizes (incl. ragged prompts),
+preempt-then-resume determinism, and the per-iteration token budget."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiny_config
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.metrics import Request
+from repro.kernels.paged_attention import (chunked_prefill_attention,
+                                           chunked_prefill_reference)
+from repro.models import RunCtx, build_model
+
+CTX = RunCtx(attn_backend="xla", moe_strategy="dropless", block_q=128, block_kv=128)
+
+# rtol/atol for chunked-vs-dense logits: both paths compute attention and
+# softmax in f32; the differences are reduction-order only.
+LOGIT_ATOL = 2e-3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config("qwen2.5-3b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------- kernel
+def _rand_pool(rng, B, maxp, ps, Hkv, D):
+    P = B * maxp + 1
+    kp = jnp.asarray(rng.standard_normal((P, ps, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((P, ps, Hkv, D)), jnp.float32)
+    pt = jnp.asarray([[1 + b * maxp + i for i in range(maxp)] for b in range(B)],
+                     jnp.int32)
+    return kp, vp, pt
+
+
+@pytest.mark.parametrize("window", [0, 5])
+def test_chunked_kernel_matches_bruteforce(window):
+    rng = np.random.default_rng(0)
+    B, C, H, Hkv, D, ps, maxp = 3, 8, 4, 2, 16, 4, 8
+    kp, vp, pt = _rand_pool(rng, B, maxp, ps, Hkv, D)
+    starts = jnp.asarray([5, 0, 13], jnp.int32)
+    nvalid = np.array([8, 6, 3])
+    lengths = jnp.asarray(np.asarray(starts) + nvalid, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, C, H, D)), jnp.float32)
+    qpos = starts[:, None] + jnp.arange(C)[None]
+
+    kg = np.asarray(kp)[np.asarray(pt)].reshape(B, maxp * ps, Hkv, D)
+    vg = np.asarray(vp)[np.asarray(pt)].reshape(B, maxp * ps, Hkv, D)
+    oracle = np.zeros((B, C, H, D), np.float32)
+    for b in range(B):
+        for i in range(C):
+            p_abs = int(starts[b]) + i
+            for h in range(H):
+                hk = h // (H // Hkv)
+                s = (kg[b, :, hk] @ np.asarray(q)[b, i, h]) * (D ** -0.5)
+                kv = np.arange(maxp * ps)
+                m = (kv < int(lengths[b])) & (kv <= p_abs)
+                if window > 0:
+                    m &= kv > p_abs - window
+                s = np.where(m, s, -1e30)
+                w = np.exp(s - s.max())
+                w = np.where(m, w, 0.0)
+                if w.sum() > 0:
+                    w /= w.sum()
+                oracle[b, i, h] = w @ vg[b, :, hk]
+
+    ref = chunked_prefill_reference(q, kp, vp, pt, lengths, qpos,
+                                    scale=D ** -0.5, window=window)
+    pal = chunked_prefill_attention(q, kp, vp, pt, lengths, qpos,
+                                    scale=D ** -0.5, window=window,
+                                    backend="pallas", interpret=True)
+    for b in range(B):
+        n = nvalid[b]
+        assert np.abs(np.asarray(ref)[b, :n] - oracle[b, :n]).max() < 1e-5
+        assert np.abs(np.asarray(pal)[b, :n] - oracle[b, :n]).max() < 1e-5
+
+
+# ---------------------------------------------------------------- model
+@pytest.mark.parametrize("chunk", [3, 5, 13, 16])
+def test_chunked_prefill_matches_dense_logits(setup, chunk):
+    """Prompt length 13 is not divisible by chunks 3/5/16; chunk 13 is the
+    whole-prompt case. All must match the dense-prefill reference."""
+    cfg, model, params = setup
+    S, gen, ps, maxp = 13, 4, 4, 16
+    r = np.random.default_rng(2)
+    toks = r.integers(0, cfg.vocab, S + gen).astype(np.int32)
+
+    dense = model.init_cache(1, 64, jnp.float32, kind="dense")
+    lg, dcache = model.prefill(params, {"tokens": jnp.asarray(toks[:S])[None]},
+                               dense, CTX)
+    ref = [np.asarray(lg[0])]
+    for i in range(gen):
+        lg, dcache = model.decode_step(params, jnp.asarray(toks[S + i:S + i + 1])[None],
+                                       dcache, jnp.asarray([S + i], jnp.int32), CTX)
+        ref.append(np.asarray(lg[0]))
+
+    paged = model.init_cache(2, 64, jnp.float32, kind="paged",
+                             page_size=ps, num_pages=64)
+    pt = jnp.asarray(np.arange(1, maxp + 1, dtype=np.int32)[None])
+    slot = jnp.asarray([1], jnp.int32)
+    out = []
+    fed, firstc = 0, True
+    while fed < S:
+        n = min(chunk, S - fed)
+        tk = np.zeros((1, chunk), np.int32)
+        tk[0, :n] = toks[fed:fed + n]
+        lg, paged = model.decode_chunk(
+            params, jnp.asarray(tk), paged, jnp.asarray([fed], jnp.int32),
+            jnp.asarray([n], jnp.int32), slot, jnp.asarray([firstc]), CTX, pt)
+        fed += n
+        firstc = False
+    out.append(np.asarray(lg[0]))
+    for i in range(gen):
+        lg, paged = model.decode_chunk(
+            params, jnp.asarray(toks[S + i:S + i + 1])[None], paged,
+            jnp.asarray([S + i], jnp.int32), jnp.asarray([1], jnp.int32),
+            slot, jnp.asarray([False]), CTX, pt)
+        out.append(np.asarray(lg[0]))
+    errs = [float(np.abs(a - b).max()) for a, b in zip(ref, out)]
+    assert max(errs) < LOGIT_ATOL, errs
+
+
+def _ref_greedy(model, params, prompt, n):
+    cache = model.init_cache(1, 128, jnp.float32, kind="dense")
+    lg, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]}, cache, CTX)
+    out = [int(jnp.argmax(lg[0]))]
+    for i in range(n - 1):
+        lg, cache = model.decode_step(params, jnp.asarray([[out[-1]]]), cache,
+                                      jnp.asarray([len(prompt) + i], jnp.int32), CTX)
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_multi_chunk_prefill_matches_reference(setup):
+    """Chunk smaller than the prompt: prefill spans several iterations while
+    other slots decode, and greedy output still matches the pure model."""
+    cfg, model, params = setup
+    r = np.random.default_rng(3)
+    prompts = [r.integers(1, cfg.vocab, int(n)).astype(np.int32)
+               for n in [19, 7, 26, 11]]
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=3, page_size=8, num_pages=64, max_seq=64,
+        prefill_chunk=8, token_budget=12, greedy=True))
+    reqs = [Request(req_id=f"c{i}", prompt_tokens=p, max_new_tokens=10)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    eng.allocator.check_invariants()
+    assert max(eng.iter_token_counts) <= 12
+    for req, p in zip(reqs, prompts):
+        assert req.finished
+        assert req.generated == _ref_greedy(model, params, p, 10)
+
+
+def test_engine_preempt_resume_reproduces_tokens(setup):
+    """Few pages force mid-stream preemption of partially-decoded requests;
+    resumed slots (re-prefilled in chunks) must emit identical tokens."""
+    cfg, model, params = setup
+    r = np.random.default_rng(4)
+    prompts = [r.integers(1, cfg.vocab, 12).astype(np.int32) for _ in range(4)]
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=3, page_size=8, num_pages=8, max_seq=64,
+        prefill_chunk=5, token_budget=9, greedy=True))
+    reqs = [Request(req_id=f"p{i}", prompt_tokens=p, max_new_tokens=12)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    eng.allocator.check_invariants()
+    assert eng.scheduler.n_preemptions > 0, "test must exercise preemption"
+    for req, p in zip(reqs, prompts):
+        assert req.finished
+        assert req.generated == _ref_greedy(model, params, p, 12)
+
+
+def test_iteration_token_budget_held_under_load(setup):
+    """64 concurrent requests with mixed prompt lengths: no iteration may
+    exceed the configured token budget."""
+    cfg, model, params = setup
+    budget = 24
+    r = np.random.default_rng(5)
+    prompts = [r.integers(1, cfg.vocab, int(r.integers(4, 40))).astype(np.int32)
+               for _ in range(64)]
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=8, page_size=8, num_pages=256, max_seq=64,
+        prefill_chunk=8, token_budget=budget, greedy=True))
+    reqs = [Request(req_id=f"b{i}", prompt_tokens=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    assert all(q.finished for q in reqs)
+    counts = list(eng.iter_token_counts)
+    assert max(counts) <= budget, max(counts)
+    # the pack must actually mix prefill chunks and decode tokens
+    assert eng.prefill_tokens > 0 and eng.decode_tokens > 0
+
+
+def test_oversized_prompt_fails_fast(setup):
+    """A prompt that can never fit max_seq must finish immediately with zero
+    tokens (the legacy dense-prefill engine crashed on these)."""
+    cfg, model, params = setup
+    r = np.random.default_rng(7)
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=2, page_size=8, num_pages=64, max_seq=32,
+        prefill_chunk=8, greedy=True))
+    big = Request(req_id="big", prompt_tokens=r.integers(1, cfg.vocab, 50).astype(np.int32),
+                  max_new_tokens=4)
+    ok = Request(req_id="ok", prompt_tokens=r.integers(1, cfg.vocab, 6).astype(np.int32),
+                 max_new_tokens=4)
+    eng.generate([big, ok], max_steps=200)
+    assert big.finished and len(big.generated) == 0
+    assert ok.finished and len(ok.generated) == 4
+    eng.allocator.check_invariants()
+
+
+def test_no_dense_cache_on_serving_path(setup):
+    """The serving engine must never allocate a dense per-request cache or
+    run a scatter copy: the legacy hooks are gone and init_cache(dense) is
+    not called during generate()."""
+    cfg, model, params = setup
+    for attr in ("_run_prefill", "_scatter_fn", "_prefill_fn", "_bucket"):
+        assert not hasattr(InferenceEngine, attr)
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=2, page_size=8, num_pages=32, max_seq=64,
+        prefill_chunk=8, greedy=True))
+    calls = []
+    orig = model.init_cache
+    model.init_cache = lambda *a, **k: (calls.append(k.get("kind", "dense")),
+                                        orig(*a, **k))[1]
+    try:
+        r = np.random.default_rng(6)
+        reqs = [Request(req_id="d0", prompt_tokens=r.integers(1, cfg.vocab, 9).astype(np.int32),
+                        max_new_tokens=4)]
+        eng.generate(reqs)
+    finally:
+        model.init_cache = orig
+    assert reqs[0].finished
+    assert "dense" not in calls

@@ -3,6 +3,7 @@ sweep over ragged group sizes (empty groups, single-expert skew)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.moe_gmm import gmm, gmm_reference

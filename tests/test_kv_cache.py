@@ -1,6 +1,7 @@
 """Paged allocator property tests: no double-ownership, no leaks, capacity
 arithmetic — driven by random alloc/free traces (hypothesis)."""
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kv_cache import OutOfPages, PagedAllocator

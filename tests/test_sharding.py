@@ -3,6 +3,7 @@ priority ordering (kv_heads over kv_seq) — property-tested."""
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
