@@ -1,0 +1,91 @@
+"""Shared-prefix KV cache perf trajectory: warm-vs-cold TTFT with a 2-page
+shared system prompt (DESIGN.md §2) at 8 / 32 / 64 concurrent requests.
+
+Cold = prefix cache disabled, every request prefills the full prompt.
+Warm = prefix cache enabled and the trie pre-seeded with the system prompt,
+so each request skips the shared pages and only prefills its own tail.
+
+``run.py`` persists these rows to ``BENCH_prefix.json``; the acceptance gate
+for the prefix-cache work is mean warm TTFT <= 0.5x cold TTFT.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import get_model, row
+from repro.core import EngineConfig, InferenceEngine, Request, now, summarize
+from repro.data.workload import WorkloadSpec, sample_workload
+
+CONCS = [8, 32, 64]
+PAGE = 16
+PREFIX_PAGES = 2          # "2-page shared system prompt" (2 x 16 = 32 tokens)
+MAX_NEW = 8
+
+
+def _prompts(cfg, n: int, seed: int) -> List[np.ndarray]:
+    prompts, _ = sample_workload(WorkloadSpec(
+        n_requests=n, vocab=cfg.vocab, scale=0.04, seed=seed,
+        shared_prefix_len=PREFIX_PAGES * PAGE))
+    return prompts
+
+
+def _engine(model, params, c: int, cache: bool) -> InferenceEngine:
+    return InferenceEngine(model, params, EngineConfig(
+        max_slots=c, page_size=PAGE, num_pages=1024, max_seq=192,
+        prefill_bucket=16, greedy=True, enable_prefix_cache=cache))
+
+
+def _run_once(model, params, prompts: List[np.ndarray], c: int, *,
+              cache: bool, tag: str):
+    """Fresh engine, trie pre-seeded with the system prompt when ``cache``.
+    Compiled prefill/decode fns are shared across engines of the same config,
+    so a prior untimed pass removes JIT compilation from the timing."""
+    eng = _engine(model, params, c, cache)
+    if cache:
+        # seed the trie: one request carrying just the shared system prompt
+        eng.generate([Request(req_id=f"{tag}-seed",
+                              prompt_tokens=prompts[0][: PREFIX_PAGES * PAGE + 2],
+                              max_new_tokens=2)])
+    reqs = [Request(req_id=f"{tag}{i}", prompt_tokens=p, max_new_tokens=MAX_NEW)
+            for i, p in enumerate(prompts)]
+    t0 = now()
+    eng.generate(reqs)
+    return summarize(reqs, t0, now(), c, extras=eng.stats())
+
+
+def run(quick: bool = True):
+    cfg, model, params = get_model()
+    rows = []
+    for c in CONCS:
+        n = max(16, c)                      # >= the 16-request acceptance case
+        prompts = _prompts(cfg, n, seed=c)
+
+        # untimed compile passes (throwaway engines, same shapes as the timed
+        # runs) so neither mode's timing includes XLA compilation
+        _run_once(model, params, prompts, c, cache=False, tag="jitc")
+        _run_once(model, params, prompts, c, cache=True, tag="jitw")
+
+        cold = _run_once(model, params, prompts, c, cache=False, tag="cold")
+        warm = _run_once(model, params, prompts, c, cache=True, tag="warm")
+
+        ratio = warm.mean["ttft"] / max(cold.mean["ttft"], 1e-9)
+        rows.append(row(
+            f"prefix.scalellm.c{c}.warm_ttft",
+            warm.mean["ttft"] * 1e6,
+            cold_ttft_us=cold.mean["ttft"] * 1e6,
+            warm_over_cold=ratio,
+            p99_warm_ttft_us=warm.p99["ttft"] * 1e6,
+            p99_cold_ttft_us=cold.p99["ttft"] * 1e6,
+            warm_throughput_tok_s=warm.throughput_tok_s,
+            cold_throughput_tok_s=cold.throughput_tok_s,
+            prefix_hit_rate=warm.extras.get("prefix_hit_rate", 0.0),
+            prefix_cached_tokens=warm.extras.get("prefix_cached_tokens", 0),
+            cow_copies=warm.extras.get("cow_copies", 0),
+            evicted_pages=warm.extras.get("evicted_pages", 0),
+            concurrency=c,
+            n_requests=n,
+            prefix_pages=PREFIX_PAGES,
+        ))
+    return rows

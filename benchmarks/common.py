@@ -37,8 +37,10 @@ from repro.models import build_model
 ARCH = "mixtral-8x7b"          # the paper's evaluation model (reduced config)
 
 ENGINE_STYLES = {
-    "hf": dict(scheduler="static", max_slots=1, host_overhead_s=0.002),
-    "vllm": dict(scheduler="max_utilization", max_slots=8, host_overhead_s=0.001),
+    "hf": dict(scheduler="static", max_slots=1, host_overhead_s=0.002,
+               enable_prefix_cache=False),
+    "vllm": dict(scheduler="max_utilization", max_slots=8, host_overhead_s=0.001,
+                 enable_prefix_cache=False),
     "scalellm": dict(scheduler="max_utilization", max_slots=8, host_overhead_s=0.0),
 }
 

@@ -3,8 +3,9 @@ Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the paper-scale
 concurrency sweeps (slow on CPU); default is the quick profile.
 
 The ``prefill`` bench additionally persists its rows to ``BENCH_prefill.json``
-(TTFT/TPOT at 8/32/64 concurrency) so subsequent PRs have a perf trajectory
-to regress against.
+(TTFT/TPOT at 8/32/64 concurrency) and the ``prefix`` bench to
+``BENCH_prefix.json`` (warm-vs-cold TTFT under a shared system prompt) so
+subsequent PRs have a perf trajectory to regress against.
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import json
 import sys
 import time
 
-PREFILL_JSON = "BENCH_prefill.json"
+PERSIST_JSON = {"prefill": "BENCH_prefill.json", "prefix": "BENCH_prefix.json"}
 
 
 def main() -> None:
@@ -21,14 +22,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names "
-                         "(fig2,fig5,fig6,fig7,table1,fig8,kernels,prefill)")
+                         "(fig2,fig5,fig6,fig7,table1,fig8,kernels,prefill,prefix)")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_fig2_breakdown, bench_fig5_endpoints,
                             bench_fig6_breakdown, bench_fig7_throughput,
                             bench_fig8_parallelism, bench_kernels,
-                            bench_prefill, bench_table1_streaming)
+                            bench_prefill, bench_prefix, bench_table1_streaming)
     from benchmarks.common import warmup
 
     benches = {
@@ -40,6 +41,7 @@ def main() -> None:
         "fig8": bench_fig8_parallelism,
         "kernels": bench_kernels,
         "prefill": bench_prefill,
+        "prefix": bench_prefix,
     }
     selected = args.only.split(",") if args.only else list(benches)
 
@@ -56,11 +58,11 @@ def main() -> None:
         for r in rows:
             derived = json.dumps(r["derived"], default=str).replace('"', "'")
             print(f"{r['name']},{r['us_per_call']:.1f},\"{derived}\"", flush=True)
-        if name == "prefill":
-            with open(PREFILL_JSON, "w") as f:
-                json.dump({"bench": "prefill", "quick": quick, "rows": rows},
+        if name in PERSIST_JSON:
+            with open(PERSIST_JSON[name], "w") as f:
+                json.dump({"bench": name, "quick": quick, "rows": rows},
                           f, indent=2, default=str)
-            print(f"# wrote {PREFILL_JSON}", file=sys.stderr)
+            print(f"# wrote {PERSIST_JSON[name]}", file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -2,7 +2,7 @@
 # (gateway + router + replicas + continuous-batching engine + paged KV).
 from repro.core.engine import EngineConfig, InferenceEngine, TokenEvent
 from repro.core.gateway import Gateway, GatewayConfig, baseline_gateway_config, scale_gateway_config
-from repro.core.kv_cache import OutOfPages, PagedAllocator
+from repro.core.kv_cache import OutOfPages, PagedAllocator, PrefixCache
 from repro.core.metrics import BenchmarkSummary, Request, now, request_metrics, summarize
 from repro.core.observability import MetricsSink
 from repro.core.replica import Replica
@@ -13,7 +13,8 @@ from repro.core.serde import CODECS
 __all__ = [
     "EngineConfig", "InferenceEngine", "TokenEvent",
     "Gateway", "GatewayConfig", "baseline_gateway_config", "scale_gateway_config",
-    "OutOfPages", "PagedAllocator", "BenchmarkSummary", "Request", "now",
+    "OutOfPages", "PagedAllocator", "PrefixCache", "BenchmarkSummary",
+    "Request", "now",
     "request_metrics", "summarize", "MetricsSink", "Replica",
     "NoReplicaAvailable", "ReplicaRouter", "RouterConfig",
     "ContinuousBatchScheduler", "CODECS",

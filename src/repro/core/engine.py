@@ -33,10 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kv_cache import PagedAllocator
+from repro.core.kv_cache import PagedAllocator, PrefixCache
 from repro.core.metrics import Request, now
 from repro.core.scheduler import ContinuousBatchScheduler, SlotState
 from repro.models import LM, RunCtx
+
+# fixed operand width of the jitted COW page-copy call (pads with 0->0
+# null-page self-copies) so repeated copies never retrace
+COW_BUF = 8
 
 
 @dataclass
@@ -52,6 +56,9 @@ class EngineConfig:
     top_p: float = 0.7
     greedy: bool = False
     scheduler: str = "max_utilization"
+    enable_prefix_cache: bool = True  # shared-prefix KV reuse (auto-off for
+                                      # ssm/encdec/vlm: pages alone don't
+                                      # capture their recurrent/cross state)
     eos_id: int = -1                  # -1: no EOS (length-controlled)
     host_overhead_s: float = 0.0      # baseline-engine emulation knob (benchmarks)
     cache_dtype: Any = jnp.float32
@@ -114,9 +121,16 @@ class InferenceEngine:
                                 cfg.max_slots + 1)
         self.chunk_rows = max(1, min(self.token_budget // self.chunk, cfg.max_slots))
         self.allocator = PagedAllocator(cfg.num_pages, cfg.page_size, cfg.max_pages_per_seq)
+        # prefix sharing is only sound when a page fully captures a token
+        # range's state: SSM carries recurrent state, encdec carries cross-KV,
+        # and VLM patch prefixes shift kv positions — all gated off.
+        has_ssm = any("M" in g.pattern for g in cfgm.layer_groups)
+        prefix_ok = (cfg.enable_prefix_cache and not has_ssm
+                     and cfgm.encoder is None and cfgm.vision is None)
+        self.prefix_cache = PrefixCache(self.allocator) if prefix_ok else None
         self.scheduler = ContinuousBatchScheduler(
             cfg.max_slots, self.allocator, policy=cfg.scheduler, max_seq=cfg.max_seq,
-            kv_extra=self.pos_offset)
+            kv_extra=self.pos_offset, prefix_cache=self.prefix_cache)
         self.cache = model.init_cache(
             cfg.max_slots, cfg.max_seq, cfg.cache_dtype, kind="paged",
             page_size=cfg.page_size, num_pages=cfg.num_pages)
@@ -127,9 +141,13 @@ class InferenceEngine:
         self._step_jit = _cached_jit(
             "step", model, self.ctx, sampling,
             lambda: jax.jit(self._step_fn, donate_argnums=(1,)))
+        self._cow_jit = _cached_jit(
+            "cow", model, self.ctx, sampling,
+            lambda: jax.jit(self._copy_pages_fn, donate_argnums=(0,)))
         self.steps = 0
         self.decode_tokens = 0
         self.prefill_tokens = 0
+        self.prefix_cached_tokens = 0     # prefill tokens skipped via cache hits
         self.iter_token_counts: deque = deque(maxlen=4096)
 
     # ------------------------------------------------------------- jitted fn
@@ -143,6 +161,51 @@ class InferenceEngine:
         nxt = sample_tokens(logits, key, self.cfg.temperature, self.cfg.top_p,
                             self.cfg.greedy)
         return jnp.where(nvalid > 0, nxt, 0), cache
+
+    def _copy_pages_fn(self, cache, src, dst):
+        """Device-side page copy (the COW step): kp/vp[:, dst] = kp/vp[:, src]
+        across every attention layer, in one fused call. Padding entries are
+        0->0 null-page self-copies (inert)."""
+        def walk(c):
+            if isinstance(c, dict):
+                return {k: (v.at[:, dst].set(v[:, src]) if k in ("kp", "vp")
+                            else walk(v)) for k, v in c.items()}
+            if isinstance(c, (list, tuple)):
+                return type(c)(walk(x) for x in c)
+            return c
+        return walk(cache)
+
+    def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
+        """Run queued COW page copies before the write that needed them.
+        Copies are applied in order; a batch holds at most one copy per
+        destination page so the gather-then-scatter semantics of a single
+        call can never race two writes to one page."""
+        while copies:
+            batch, rest, seen = [], [], set()
+            for s, d in copies:
+                (rest if d in seen else batch).append((s, d))
+                seen.add(d)
+            for i in range(0, len(batch), COW_BUF):
+                sub = batch[i:i + COW_BUF]
+                src = np.zeros(COW_BUF, np.int32)
+                dst = np.zeros(COW_BUF, np.int32)
+                for j, (s, d) in enumerate(sub):
+                    src[j], dst[j] = s, d
+                self.cache = self._cow_jit(self.cache, jnp.asarray(src),
+                                           jnp.asarray(dst))
+            copies = rest
+
+    def _register_prefix(self, st: SlotState) -> None:
+        """Insert the slot's newly completed full prompt pages into the
+        prefix trie (content is final once fed: later writes to shared or
+        cached pages always go through COW)."""
+        if self.prefix_cache is None:
+            return
+        nb = min(st.fed, len(st.request.prompt_tokens)) // self.cfg.page_size
+        if nb > st.registered_blocks:
+            self.prefix_cache.insert(st.all_tokens,
+                                     self.allocator.owned(st.slot), nb)
+            st.registered_blocks = nb
 
     # ------------------------------------------------------------- helpers
     def _next_key(self):
@@ -199,6 +262,7 @@ class InferenceEngine:
             if r.t2 == 0.0:
                 r.t2 = now()
             st.admitted_at = now()
+            self.prefix_cached_tokens += st.cached_tokens
             if st.feed_len + self.pos_offset >= cfg.max_seq:
                 # prompt can never fit max_seq: fail fast with zero tokens
                 # instead of spinning on page growth that cannot succeed.
@@ -207,15 +271,28 @@ class InferenceEngine:
                 self._finish(st)
                 events.append(TokenEvent(r, -1, now(), True))
 
-        # ---- prefill chunk pack: grow pages, then one fixed-shape call
+        # ---- prefill chunk pack: grow pages, detach shared pages (COW),
+        # then one fixed-shape call
         grants: List[Tuple[SlotState, int]] = []
+        copies: List[Tuple[int, int]] = []
         for st, n in plan.prefill:
             if st.slot not in self.scheduler.running:      # preempted by an earlier grow
                 continue
             if not self.scheduler.grow_for_tokens(st.slot, st.fed + n):
                 continue                                   # pages exhausted: slot waits
+            if self.prefix_cache is not None:
+                # the chunk writes kv positions [fed, fed+n): any shared or
+                # trie-registered page in that range must be detached first
+                lo = (self.pos_offset + st.fed) // cfg.page_size
+                hi = (self.pos_offset + st.fed + n - 1) // cfg.page_size
+                c = self.scheduler.make_writable(st.slot, lo, hi)
+                if c is None:
+                    continue                               # no page for the copy: wait
+                copies += c
             grants.append((st, n))
         grants = [(st, n) for st, n in grants if st.slot in self.scheduler.running]
+        if copies:
+            self._apply_copies(copies)                     # before the chunk writes
         if grants:
             B, C = self.chunk_rows, self.chunk
             tokens = np.zeros((B, C), np.int32)
@@ -255,6 +332,7 @@ class InferenceEngine:
                 st.fed += n
                 iter_tokens += n
                 self.prefill_tokens += n
+                self._register_prefix(st)
                 if st.prefilling:
                     continue                               # more chunks to go
                 if st.request.generated:                   # resumed mid-decode
@@ -276,6 +354,7 @@ class InferenceEngine:
         decode_sts = [st for st in plan.decode if _live(st) and st.last_token >= 0]
         decode_sts += [st for st, _ in grants
                        if _live(st) and not st.prefilling and st.last_token >= 0]
+        dec_copies: List[Tuple[int, int]] = []
         for st in list(decode_sts):
             if st.slot not in self.scheduler.running:      # preempted by an earlier grow
                 decode_sts.remove(st)
@@ -283,8 +362,17 @@ class InferenceEngine:
             if not self.scheduler.grow_for_decode(st.slot):
                 decode_sts.remove(st)                      # paused/unschedulable
                 continue
+            if self.prefix_cache is not None:
+                blk = (self.pos_offset + st.fed) // cfg.page_size
+                c = self.scheduler.make_writable(st.slot, blk, blk)
+                if c is None:
+                    decode_sts.remove(st)
+                    continue
+                dec_copies += c
             self.page_table[st.slot] = self.allocator.page_table_row(st.slot)
         decode_sts = [st for st in decode_sts if st.slot in self.scheduler.running]
+        if dec_copies:
+            self._apply_copies(dec_copies)                 # before the decode writes
         if not decode_sts:
             self.iter_token_counts.append(iter_tokens)
             return events
@@ -344,6 +432,27 @@ class InferenceEngine:
         st.request.t3 = now()
         self.scheduler.finish(st.slot)
         self._drop_extras(st.request.req_id)
+
+    def stats(self) -> Dict[str, float]:
+        """Cumulative engine counters (prefix cache, COW, eviction) for the
+        observability sink and benchmark extras; sampled at TokenEvent
+        granularity by replica/gateway consumers."""
+        pc = self.prefix_cache
+        return {
+            "steps": float(self.steps),
+            "prefill_tokens": float(self.prefill_tokens),
+            "decode_tokens": float(self.decode_tokens),
+            "prefix_cached_tokens": float(self.prefix_cached_tokens),
+            "prefix_hit_pages": float(pc.hit_pages if pc else 0),
+            "prefix_miss_pages": float(pc.miss_pages if pc else 0),
+            "prefix_hit_rate": pc.hit_rate() if pc else 0.0,
+            "prefix_nodes": float(len(pc) if pc else 0),
+            "cow_copies": float(self.allocator.cow_copies),
+            "evicted_pages": float(self.allocator.evicted_pages),
+            "retired_pages": float(self.allocator.retired_pages),
+            "preemptions": float(self.scheduler.n_preemptions),
+            "kv_utilization": self.allocator.utilization(),
+        }
 
     def cancel(self, req_id: str) -> bool:
         """Drop a request (hedging loser / client disconnect). Frees its slot."""

@@ -106,7 +106,11 @@ class BenchmarkSummary:
 
 
 def summarize(requests: List[Request], t_start: float, t_end: float,
-              concurrency: int, timeout_s: float = 60.0) -> BenchmarkSummary:
+              concurrency: int, timeout_s: float = 60.0,
+              extras: Optional[Dict[str, Any]] = None) -> BenchmarkSummary:
+    """``extras`` carries engine-level counters (prefix-cache hit rate, COW
+    copies, evictions — see ``InferenceEngine.stats``) alongside the
+    request-latency aggregates."""
     ms = [request_metrics(r, timeout_s) for r in requests]
     total_tokens = sum(m.n_tokens for m in ms)
     fields = ["avg_latency", "full_latency", "gateway_latency", "engine_latency",
@@ -123,4 +127,5 @@ def summarize(requests: List[Request], t_start: float, t_end: float,
         p50=agg(lambda v: float(np.percentile(v, 50)) if v else 0.0),
         p99=agg(lambda v: float(np.percentile(v, 99)) if v else 0.0),
         timeout_frac=sum(m.timed_out for m in ms) / max(len(ms), 1),
+        extras=dict(extras or {}),
     )

@@ -49,6 +49,16 @@ class MetricsSink:
         with self._lock:
             self._records.append(rec)
 
+    def record_engine(self, engine_id: str, stats: Dict[str, float]) -> None:
+        """Snapshot an engine's cumulative counters (``InferenceEngine.stats``):
+        prefix-cache hit/miss pages, COW copies, evictions, hit-rate gauge.
+        Cumulative counters become gauges (last value wins)."""
+        rec = _dumps({"kind": "engine", "engine_id": engine_id, **stats})
+        with self._lock:
+            self._records.append(rec)
+            for k, v in stats.items():
+                self.counters[f"engine.{k}"] = float(v)
+
     def flush(self) -> int:
         """Persist buffered records to disk; returns count written."""
         with self._lock:

@@ -70,6 +70,11 @@ class Replica:
         return orphans
 
     # ------------------------------------------------------------- load stats
+    def engine_stats(self) -> Dict[str, float]:
+        """TokenEvent-level engine counters (prefix cache, COW, eviction) —
+        safe to sample from any thread (all cumulative scalars)."""
+        return self.engine.stats()
+
     @property
     def load(self) -> int:
         return self._outstanding

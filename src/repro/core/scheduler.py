@@ -30,7 +30,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.kv_cache import OutOfPages, PagedAllocator
+from repro.core.kv_cache import OutOfPages, PagedAllocator, PrefixCache
 from repro.core.metrics import Request
 
 
@@ -44,6 +44,8 @@ class SlotState:
     last_token: int = -1           # sampled but not yet fed
     admitted_at: float = 0.0
     order: int = 0                 # admission sequence number (preemption victim choice)
+    cached_tokens: int = 0         # prefix-cache hit: tokens whose prefill was skipped
+    registered_blocks: int = 0     # prompt pages already inserted into the prefix trie
 
     @property
     def prefilling(self) -> bool:
@@ -69,13 +71,17 @@ class IterationPlan:
 class ContinuousBatchScheduler:
     def __init__(self, max_slots: int, allocator: PagedAllocator,
                  policy: str = "max_utilization", max_seq: int = 4096,
-                 kv_extra: int = 0):
+                 kv_extra: int = 0, prefix_cache: Optional[PrefixCache] = None):
         assert policy in ("max_utilization", "conservative", "static")
+        # prefix sharing assumes token position == kv position; a kv prefix
+        # (VLM patches) shifts every page, so the two are mutually exclusive
+        assert prefix_cache is None or kv_extra == 0
         self.max_slots = max_slots
         self.allocator = allocator
         self.policy = policy
         self.max_seq = max_seq
         self.kv_extra = kv_extra       # per-seq kv prefix (e.g. VLM patches)
+        self.prefix_cache = prefix_cache
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, SlotState] = {}
         self._order = 0
@@ -117,16 +123,41 @@ class ContinuousBatchScheduler:
         while self.waiting and free:
             req = self.waiting[0]
             restored = max(len(req.generated) - 1, 0)
-            need = self._pages_for(req, restored, chunk)
+            all_tokens = list(map(int, req.prompt_tokens)) + list(req.generated)
+            feed_len = len(all_tokens) - (1 if req.generated else 0)
+            # prefix-cache probe: leading full pages whose KV already exists
+            # cost nothing beyond a page-table entry; at least one token is
+            # always left to feed so the chunk call yields last-token logits.
+            shared: List[int] = []
+            n_cached = 0
+            if self.prefix_cache is not None and feed_len > 0:
+                shared = self.prefix_cache.lookup(
+                    all_tokens[:feed_len])[: self.allocator.max_pages_per_seq]
+                if shared:
+                    n_cached = min(len(shared) * self.allocator.page_size,
+                                   feed_len - 1)
+            if shared:
+                # only the uncached remainder needs fresh pages now
+                if self.policy == "conservative":
+                    tokens_now = feed_len + req.max_new_tokens
+                elif chunk > 0:
+                    tokens_now = min(feed_len + 1, n_cached + chunk)
+                else:
+                    tokens_now = feed_len + 1
+                need = max(self.allocator.pages_needed(tokens_now) - len(shared), 0)
+            else:
+                need = self._pages_for(req, restored, chunk)
             if need + pending_pages > self.allocator.free_pages:
                 break
             pending_pages += need
             self.waiting.popleft()
             slot = free.pop(0)
-            all_tokens = list(map(int, req.prompt_tokens)) + list(req.generated)
             st = SlotState(slot=slot, request=req, all_tokens=all_tokens,
-                           feed_len=len(all_tokens) - (1 if req.generated else 0),
-                           order=self._order)
+                           feed_len=feed_len, fed=n_cached,
+                           cached_tokens=n_cached,
+                           registered_blocks=len(shared), order=self._order)
+            if shared:
+                self.allocator.share(slot, shared)
             self._order += 1
             self.running[slot] = st
             d.admit.append(st)
@@ -201,3 +232,20 @@ class ContinuousBatchScheduler:
         """Ensure slot has a page for one more token; preempt others if the
         policy allows. Returns False if the slot itself must pause."""
         return self.grow_for_tokens(slot, self.running[slot].fed + 1)
+
+    def make_writable(self, slot: int, first_block: int,
+                      last_block: int) -> Optional[List[Tuple[int, int]]]:
+        """Copy-on-write entry point: detach any shared/cached pages in the
+        slot's logical range [first_block, last_block] onto fresh pages
+        (preempting under page pressure, like growth). Returns the (src, dst)
+        device page copies to apply before writing, or None if the slot
+        itself must pause."""
+        while True:
+            try:
+                return self.allocator.ensure_exclusive(slot, first_block,
+                                                       last_block)
+            except OutOfPages:
+                if self.policy != "max_utilization":
+                    return None
+                if self.preempt_one(protect=slot) is None:
+                    return None

@@ -25,6 +25,12 @@ class WorkloadSpec:
     max_new_tokens: int = 512
     scale: float = 1.0              # shrink for tiny-model CPU benches
     seed: int = 0
+    # shared-system-prompt traffic: every request's prompt begins with one of
+    # ``n_shared_prefixes`` fixed prefixes of exactly ``shared_prefix_len``
+    # tokens (NOT scaled — callers size it in pages for the prefix-cache
+    # benches). 0 disables.
+    shared_prefix_len: int = 0
+    n_shared_prefixes: int = 1
 
 
 def sample_workload(spec: WorkloadSpec) -> Tuple[List[np.ndarray], List[int]]:
@@ -40,4 +46,9 @@ def sample_workload(spec: WorkloadSpec) -> Tuple[List[np.ndarray], List[int]]:
     ).astype(int)
     outs = np.maximum(outs, 2)
     prompts = [rng.integers(1, spec.vocab, n).astype(np.int32) for n in lens]
+    if spec.shared_prefix_len > 0:
+        prefixes = [rng.integers(1, spec.vocab, spec.shared_prefix_len).astype(np.int32)
+                    for _ in range(max(spec.n_shared_prefixes, 1))]
+        prompts = [np.concatenate([prefixes[i % len(prefixes)], p])
+                   for i, p in enumerate(prompts)]
     return prompts, outs.tolist()

@@ -1,10 +1,17 @@
-"""Paged allocator property tests: no double-ownership, no leaks, capacity
-arithmetic — driven by random alloc/free traces (hypothesis)."""
-import pytest
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
-from hypothesis import given, settings, strategies as st
+"""Paged allocator property tests: refcount/ownership consistency, no leaks,
+capacity arithmetic, COW discipline, LRU retirement — driven by random
+alloc/free/share/COW traces (hypothesis when installed, plus a seeded
+deterministic fuzz that always runs)."""
+import random
 
-from repro.core.kv_cache import OutOfPages, PagedAllocator
+import pytest
+
+try:                                       # property tests need hypothesis;
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # deterministic tests run regardless
+    given = settings = st = None
+
+from repro.core.kv_cache import OutOfPages, PagedAllocator, PrefixCache
 
 
 def test_basic_alloc_free():
@@ -34,6 +41,93 @@ def test_max_pages_per_seq():
         a.allocate(0, 12)
 
 
+def test_can_allocate_enforces_max_pages_per_seq():
+    """Regression: can_allocate used to ignore max_pages_per_seq, so the
+    scheduler could admit a request that allocate() then rejected."""
+    a = PagedAllocator(num_pages=64, page_size=4, max_pages_per_seq=2)
+    assert not a.can_allocate(0, 12)      # allocate() would raise
+    assert a.can_allocate(0, 8)
+    a.allocate(0, 8)
+    assert not a.can_allocate(0, 9)       # growth past the cap
+    # agreement with allocate() across the boundary
+    for n in range(1, 20):
+        b = PagedAllocator(num_pages=64, page_size=4, max_pages_per_seq=2)
+        ok = b.can_allocate(5, n)
+        try:
+            b.allocate(5, n)
+            assert ok, n
+        except OutOfPages:
+            assert not ok, n
+
+
+def test_share_refcounts_and_retirement():
+    a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=8)
+    pages = a.allocate(0, 8)              # 2 exclusive pages
+    a.share(1, pages)                     # both now shared
+    assert all(a.refcount(p) == 2 for p in pages)
+    a.check_invariants()
+    a.free(0)
+    assert all(a.refcount(p) == 1 for p in pages)
+    # mark as prefix-cached: refcount 0 retires to LRU instead of freeing
+    for p in pages:
+        a.mark_cached(p)
+    a.free(1)
+    assert a.retired_pages == 2
+    assert a.free_pages == 15             # retired pages still count as capacity
+    # revival: share out of the LRU pool
+    a.share(2, pages)
+    assert a.retired_pages == 0 and all(a.refcount(p) == 1 for p in pages)
+    a.check_invariants()
+
+
+def test_cow_never_mutates_shared_page():
+    a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=8)
+    pages = a.allocate(0, 8)
+    a.share(1, pages)
+    copies = a.ensure_exclusive(1, 0, 1)  # both blocks shared -> both copied
+    assert len(copies) == 2
+    for src, dst in copies:
+        assert src in pages               # original untouched, still owned by 0
+        assert a.refcount(src) == 1
+        assert a.refcount(dst) == 1 and dst not in pages
+    assert a.owned(0) == pages            # slot 0's mapping unchanged
+    assert a.cow_copies == 2
+    # exclusive uncached pages need no copy
+    assert a.ensure_exclusive(1, 0, 1) == []
+    a.check_invariants()
+
+
+def test_cow_on_cached_page_even_when_refcount_one():
+    """A trie-registered page must never be written even if only one slot
+    references it — the cached content backs future prefix hits."""
+    a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=8)
+    pages = a.allocate(0, 4)
+    a.mark_cached(pages[0])
+    copies = a.ensure_exclusive(0, 0, 0)
+    assert len(copies) == 1 and copies[0][0] == pages[0]
+    assert a.retired_pages == 1           # original retired, content preserved
+    a.check_invariants()
+
+
+def test_eviction_only_takes_refcount_zero_pages():
+    a = PagedAllocator(num_pages=5, page_size=4, max_pages_per_seq=8)
+    evicted = []
+    a.on_evict = evicted.append
+    held = a.allocate(0, 8)               # 2 live pages
+    cached = a.allocate(1, 8)             # 2 pages, then retired via cache
+    for p in cached:
+        a.mark_cached(p)
+    a.free(1)
+    assert a.retired_pages == 2
+    new = a.allocate(2, 8)                # pool has only the 2 retired left
+    assert sorted(new) == sorted(cached)  # reclaimed LRU pages, oldest first
+    assert evicted == cached and a.evicted_pages == 2
+    assert all(a.refcount(p) == 1 for p in held)
+    a.check_invariants()
+    with pytest.raises(OutOfPages):
+        a.allocate(3, 4)                  # nothing refcount-0 left to evict
+
+
 def test_page_table_row():
     a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=4)
     a.allocate(3, 7)
@@ -43,17 +137,113 @@ def test_page_table_row():
     assert 0 not in a.owned(3)      # null page never handed out
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 40),
-                          st.booleans()), min_size=1, max_size=60))
-def test_random_traces_keep_invariants(trace):
-    a = PagedAllocator(num_pages=24, page_size=4, max_pages_per_seq=10)
-    for slot, tokens, do_free in trace:
-        if do_free:
-            a.free(slot)
-        else:
+# ---------------------------------------------------------------------------
+# Refcount/COW/trie property suite. Ops model the engine's real call pattern:
+# admit (lookup+share then allocate), feed (insert full prompt blocks into the
+# trie), write (ensure_exclusive over a block range), release (free). The
+# allocator invariants (sum of refcounts == ownership counts; referenced +
+# free + retired == total - 1; cached pages live or retired) are re-checked
+# after every op, plus: COW only ever detaches shared/cached pages and always
+# yields fresh refcount-1 destinations; eviction only takes refcount-0 pages.
+# Driven by hypothesis when installed, and always by a seeded fuzz below.
+# ---------------------------------------------------------------------------
+
+def _prompt(pid: int, n: int):
+    # deterministic content per prompt id so equal pids share prefixes
+    return [(pid * 97 + i) % 13 for i in range(n)]
+
+
+def _run_refcount_trace(trace):
+    ps = 4
+    a = PagedAllocator(num_pages=24, page_size=ps, max_pages_per_seq=10)
+    trie = PrefixCache(a)
+    base_evict = a.on_evict
+
+    def on_evict(page):
+        assert a.refcount(page) == 0, "evicted a referenced page"
+        base_evict(page)
+    a.on_evict = on_evict
+
+    slot_pid = {}
+    for slot, op, pid, n in trace:
+        if op == "admit" and slot not in slot_pid:
+            tokens = _prompt(pid, n)
+            shared = trie.lookup(tokens)[: a.max_pages_per_seq]
             try:
-                a.allocate(slot, tokens)
+                a.share(slot, shared)
+                a.allocate(slot, n)
+                slot_pid[slot] = (pid, n)
             except OutOfPages:
-                pass
+                a.free(slot)              # admission failed: roll back shares
+        elif op == "feed" and slot in slot_pid:
+            spid, sn = slot_pid[slot]
+            trie.insert(_prompt(spid, sn), a.owned(slot), sn // ps)
+        elif op == "write" and slot in slot_pid:
+            owned = a.owned(slot)
+            if owned:
+                lo = pid % len(owned)
+                before = {p: a.refcount(p) for p in owned}
+                cached_before = set(a._cached)
+                try:
+                    copies = a.ensure_exclusive(slot, lo, len(owned) - 1)
+                except OutOfPages:
+                    continue
+                for src, dst in copies:
+                    assert before[src] > 1 or src in cached_before, \
+                        "COW detached an exclusive uncached page"
+                    assert a.refcount(dst) == 1, "COW destination not fresh"
+                    assert src != dst
+                # the written range is now exclusively owned and uncached
+                for p in a.owned(slot)[lo:]:
+                    assert a.refcount(p) == 1 and p not in a._cached
+        elif op == "release" and slot in slot_pid:
+            a.free(slot)
+            del slot_pid[slot]
         a.check_invariants()
+
+    for slot in list(slot_pid):
+        a.free(slot)
+    a.check_invariants()
+    assert not a._ref, "references leaked after all slots freed"
+    assert len(a._free) + len(a._lru) == a.num_pages - 1
+
+
+def test_refcount_cow_trie_seeded_fuzz():
+    """Seeded stand-in for the hypothesis suite so the invariants are
+    exercised even where hypothesis is not installed."""
+    for seed in range(8):
+        rng = random.Random(seed)
+        trace = [(rng.randrange(5),
+                  rng.choice(["admit", "feed", "write", "release"]),
+                  rng.randrange(4), rng.randint(1, 40))
+                 for _ in range(120)]
+        _run_refcount_trace(trace)
+
+
+if st is not None:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 40),
+                              st.booleans()), min_size=1, max_size=60))
+    def test_random_traces_keep_invariants(trace):
+        a = PagedAllocator(num_pages=24, page_size=4, max_pages_per_seq=10)
+        for slot, tokens, do_free in trace:
+            if do_free:
+                a.free(slot)
+            else:
+                try:
+                    a.allocate(slot, tokens)
+                except OutOfPages:
+                    pass
+            a.check_invariants()
+
+    _OPS = st.lists(
+        st.tuples(st.integers(0, 4),          # slot
+                  st.sampled_from(["admit", "feed", "write", "release"]),
+                  st.integers(0, 3),          # prompt id (content class)
+                  st.integers(1, 40)),        # token count
+        min_size=1, max_size=80)
+
+    @settings(max_examples=30, deadline=None)
+    @given(_OPS)
+    def test_refcount_cow_trie_traces_keep_invariants(trace):
+        _run_refcount_trace(trace)
