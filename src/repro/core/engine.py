@@ -282,13 +282,14 @@ class InferenceEngine:
                 continue                                   # pages exhausted: slot waits
             if self.prefix_cache is not None:
                 # the chunk writes kv positions [fed, fed+n): any shared or
-                # trie-registered page in that range must be detached first
+                # trie-registered page in that range must be detached first.
+                # On failure the slot waits, but pairs for blocks already
+                # detached stay queued in ``copies`` — their fresh pages need
+                # the content before any later write or resume.
                 lo = (self.pos_offset + st.fed) // cfg.page_size
                 hi = (self.pos_offset + st.fed + n - 1) // cfg.page_size
-                c = self.scheduler.make_writable(st.slot, lo, hi)
-                if c is None:
+                if not self.scheduler.make_writable(st.slot, lo, hi, copies):
                     continue                               # no page for the copy: wait
-                copies += c
             grants.append((st, n))
         grants = [(st, n) for st, n in grants if st.slot in self.scheduler.running]
         if copies:
@@ -364,11 +365,10 @@ class InferenceEngine:
                 continue
             if self.prefix_cache is not None:
                 blk = (self.pos_offset + st.fed) // cfg.page_size
-                c = self.scheduler.make_writable(st.slot, blk, blk)
-                if c is None:
+                if not self.scheduler.make_writable(st.slot, blk, blk,
+                                                    dec_copies):
                     decode_sts.remove(st)
                     continue
-                dec_copies += c
             self.page_table[st.slot] = self.allocator.page_table_row(st.slot)
         decode_sts = [st for st in decode_sts if st.slot in self.scheduler.running]
         if dec_copies:

@@ -33,6 +33,7 @@ Invariants (property-tested in tests/test_kv_cache.py):
 """
 from __future__ import annotations
 
+import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -97,6 +98,11 @@ class PagedAllocator:
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)
 
+    def retired(self, page: int) -> bool:
+        """True if the page sits in the LRU pool: its content is reusable but
+        reviving it consumes capacity that ``free_pages`` counts."""
+        return page in self._lru
+
     def owned(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, []))
 
@@ -155,14 +161,23 @@ class PagedAllocator:
                 self._ref[p] = 1
             owned.append(p)
 
-    def ensure_exclusive(self, slot: int, first_block: int,
-                         last_block: int) -> List[Tuple[int, int]]:
+    def ensure_exclusive(self, slot: int, first_block: int, last_block: int,
+                         copies: Optional[List[Tuple[int, int]]] = None
+                         ) -> List[Tuple[int, int]]:
         """Copy-on-write: make the slot's logical pages [first_block,
         last_block] safe to write. A page that is shared (refcount > 1) or
         registered in the prefix cache is replaced by a fresh page; the
         returned (src, dst) pairs must be applied as device-side page copies
-        BEFORE the write lands. Never mutates a page with refcount > 1."""
-        copies: List[Tuple[int, int]] = []
+        BEFORE the write lands. Never mutates a page with refcount > 1.
+
+        Pairs are appended to ``copies`` when given, so they survive an
+        ``OutOfPages`` raised partway through the range: blocks detached
+        before the abort already point at fresh pages holding garbage, and a
+        retrying caller (scheduler.make_writable) must still apply their
+        device copies — dropping them would leave uninitialized KV where
+        cached prefix content was expected."""
+        if copies is None:
+            copies = []
         owned = self._owned.get(slot, [])
         for i in range(max(first_block, 0), min(last_block + 1, len(owned))):
             p = owned[i]
@@ -228,9 +243,14 @@ _ROOT_HASH = 0
 
 
 def block_hash(prev: int, tokens: Sequence[int]) -> int:
-    """Chained content hash of one full page of tokens. Python's tuple-of-int
-    hash is process-stable (PYTHONHASHSEED only perturbs str/bytes)."""
-    return hash((prev, tuple(int(t) for t in tokens)))
+    """Chained content hash of one full page of tokens: blake2b-64 over the
+    parent hash and the token bytes. A strong content hash (vLLM moved the
+    same way) keeps collisions — accidental, or deliberate prefix-cache
+    poisoning in multi-tenant use — from mapping two different prefixes to
+    one trie node and silently serving the wrong KV pages."""
+    data = np.asarray(tokens, dtype=np.int64).tobytes()
+    h = hashlib.blake2b(prev.to_bytes(8, "little") + data, digest_size=8)
+    return int.from_bytes(h.digest(), "little")
 
 
 class PrefixCache:
@@ -258,10 +278,15 @@ class PrefixCache:
             self._nodes.pop(h, None)
 
     # ---------------- lookup / insert ----------------
-    def lookup(self, tokens: Sequence[int]) -> List[int]:
+    def lookup(self, tokens: Sequence[int], *, record: bool = True) -> List[int]:
         """Physical pages covering the longest cached prefix of full token
         blocks. Descendant pages of a missing node are unreachable by
-        construction (their chain hash includes the missing ancestor)."""
+        construction (their chain hash includes the missing ancestor).
+
+        ``record=False`` probes without touching the hit/miss counters — for
+        speculative callers (the scheduler re-probes the head-of-queue
+        request every scheduling step) that count via ``record_probe`` only
+        when the request is actually admitted."""
         ps = self.page_size
         pages: List[int] = []
         h = _ROOT_HASH
@@ -272,9 +297,16 @@ class PrefixCache:
             if page is None:
                 break
             pages.append(page)
-        self.hit_pages += len(pages)
-        self.miss_pages += n_blocks - len(pages)
+        if record:
+            self.hit_pages += len(pages)
+            self.miss_pages += n_blocks - len(pages)
         return pages
+
+    def record_probe(self, n_tokens: int, hit_pages: int) -> None:
+        """Count one admitted request's probe outcome toward the hit-rate
+        stats (pairs with ``lookup(..., record=False)``)."""
+        self.hit_pages += hit_pages
+        self.miss_pages += max(n_tokens // self.page_size - hit_pages, 0)
 
     def insert(self, tokens: Sequence[int], pages: Sequence[int],
                n_blocks: int) -> int:

@@ -132,10 +132,12 @@ class ContinuousBatchScheduler:
             n_cached = 0
             if self.prefix_cache is not None and feed_len > 0:
                 shared = self.prefix_cache.lookup(
-                    all_tokens[:feed_len])[: self.allocator.max_pages_per_seq]
+                    all_tokens[:feed_len],
+                    record=False)[: self.allocator.max_pages_per_seq]
                 if shared:
                     n_cached = min(len(shared) * self.allocator.page_size,
                                    feed_len - 1)
+            revive = 0
             if shared:
                 # only the uncached remainder needs fresh pages now
                 if self.policy == "conservative":
@@ -145,11 +147,19 @@ class ContinuousBatchScheduler:
                 else:
                     tokens_now = feed_len + 1
                 need = max(self.allocator.pages_needed(tokens_now) - len(shared), 0)
+                # reviving a retired shared page consumes LRU capacity that
+                # free_pages still counts as allocatable — bill it as demand,
+                # or admission over-commits and leans on OutOfPages/preemption
+                revive = sum(1 for p in shared if self.allocator.retired(p))
             else:
                 need = self._pages_for(req, restored, chunk)
-            if need + pending_pages > self.allocator.free_pages:
+            if need + revive + pending_pages > self.allocator.free_pages:
                 break
+            # revived pages leave free_pages at the share() below; only the
+            # fresh-page demand carries forward to later candidates
             pending_pages += need
+            if self.prefix_cache is not None and feed_len > 0:
+                self.prefix_cache.record_probe(feed_len, len(shared))
             self.waiting.popleft()
             slot = free.pop(0)
             st = SlotState(slot=slot, request=req, all_tokens=all_tokens,
@@ -233,19 +243,23 @@ class ContinuousBatchScheduler:
         policy allows. Returns False if the slot itself must pause."""
         return self.grow_for_tokens(slot, self.running[slot].fed + 1)
 
-    def make_writable(self, slot: int, first_block: int,
-                      last_block: int) -> Optional[List[Tuple[int, int]]]:
+    def make_writable(self, slot: int, first_block: int, last_block: int,
+                      copies: List[Tuple[int, int]]) -> bool:
         """Copy-on-write entry point: detach any shared/cached pages in the
         slot's logical range [first_block, last_block] onto fresh pages
-        (preempting under page pressure, like growth). Returns the (src, dst)
-        device page copies to apply before writing, or None if the slot
-        itself must pause."""
+        (preempting under page pressure, like growth). The (src, dst) device
+        page copies are appended to ``copies`` — including pairs from blocks
+        detached before an ``OutOfPages``, which the caller MUST still apply
+        even on failure (those blocks already point at fresh pages holding
+        garbage). Returns False if the slot itself must pause: the range is
+        not fully exclusive and must not be written."""
         while True:
             try:
-                return self.allocator.ensure_exclusive(slot, first_block,
-                                                       last_block)
+                self.allocator.ensure_exclusive(slot, first_block, last_block,
+                                                copies=copies)
+                return True
             except OutOfPages:
                 if self.policy != "max_utilization":
-                    return None
+                    return False
                 if self.preempt_one(protect=slot) is None:
-                    return None
+                    return False

@@ -109,6 +109,30 @@ def test_cow_on_cached_page_even_when_refcount_one():
     a.check_invariants()
 
 
+def test_cow_partial_failure_preserves_copies():
+    """Regression: OutOfPages partway through ensure_exclusive used to drop
+    the (src, dst) pairs of blocks already detached — their fresh pages would
+    hold uninitialized KV. Callers pass a shared list that survives the abort
+    and accumulates across retries."""
+    a = PagedAllocator(num_pages=4, page_size=4, max_pages_per_seq=8)
+    pages = a.allocate(0, 8)              # 2 pages; 1 page left free
+    a.share(1, pages)
+    copies = []
+    with pytest.raises(OutOfPages):
+        a.ensure_exclusive(1, 0, 1, copies=copies)
+    assert len(copies) == 1               # first block detached before abort
+    src, dst = copies[0]
+    assert src == pages[0] and a.owned(1)[0] == dst and a.refcount(dst) == 1
+    a.check_invariants()
+    a.free(0)                             # pressure released
+    a.ensure_exclusive(1, 0, 1, copies=copies)
+    # block 1 became exclusive when slot 0 freed (no second copy needed) and
+    # the pair from the failed attempt is still queued
+    assert copies == [(src, dst)]
+    assert a.owned(1) == [dst, pages[1]]
+    a.check_invariants()
+
+
 def test_eviction_only_takes_refcount_zero_pages():
     a = PagedAllocator(num_pages=5, page_size=4, max_pages_per_seq=8)
     evicted = []

@@ -2,9 +2,9 @@
 (max-utilization), static batching, slot hygiene."""
 import numpy as np
 
-from repro.core.kv_cache import PagedAllocator
+from repro.core.kv_cache import PagedAllocator, PrefixCache
 from repro.core.metrics import Request
-from repro.core.scheduler import ContinuousBatchScheduler
+from repro.core.scheduler import ContinuousBatchScheduler, SlotState
 
 
 def _req(i, n=8, max_new=4):
@@ -76,3 +76,67 @@ def test_preemption_pauses_latest_and_requeues():
     assert s.waiting[0].preemptions == 1
     assert s.n_preemptions == 1
     a.check_invariants()
+
+
+def test_make_writable_keeps_partial_copies_across_preempt_retries():
+    """Regression: a COW range spanning multiple pages under page pressure
+    used to lose the (src, dst) pairs queued before OutOfPages when
+    make_writable retried after preempting — the already-detached blocks were
+    then skipped and their device copies never ran, leaving fresh pages with
+    uninitialized KV where cached prefix content was expected."""
+    s, a = _sched(pages=4, slots=3)       # 3 usable pages
+    pages = a.allocate(0, 8)              # victim slot: 2 pages, 1 left free
+    s.running[0] = SlotState(slot=0, request=_req(0), all_tokens=[1], order=0)
+    a.share(1, pages)
+    s.running[1] = SlotState(slot=1, request=_req(1), all_tokens=[1], order=1)
+    copies = []
+    assert s.make_writable(1, 0, 1, copies)
+    # first block detached before the pool ran dry; slot 0 was preempted to
+    # free the rest, after which block 1 became exclusive (no copy needed)
+    assert s.n_preemptions == 1 and 0 not in s.running
+    assert len(copies) == 1
+    src, dst = copies[0]
+    assert src == pages[0] and a.owned(1) == [dst, pages[1]]
+    a.check_invariants()
+
+
+def test_prefix_stats_counted_once_per_admission():
+    """Regression: schedule() probes the trie for the head-of-queue request
+    every scheduling step; a request stuck waiting on pages used to inflate
+    the hit/miss counters (and the reported hit rate) on every re-probe."""
+    alloc = PagedAllocator(num_pages=4, page_size=4, max_pages_per_seq=16)
+    trie = PrefixCache(alloc)
+    s = ContinuousBatchScheduler(2, alloc, prefix_cache=trie)
+    alloc.allocate(9, 12)                 # drain the pool
+    s.add(_req(0, n=8))
+    for _ in range(5):
+        assert s.schedule().admit == []   # stuck: no pages
+    assert trie.hit_pages == 0 and trie.miss_pages == 0
+    alloc.free(9)
+    assert len(s.schedule().admit) == 1
+    assert trie.miss_pages == 2 and trie.hit_pages == 0   # counted exactly once
+
+
+def test_admission_counts_revived_retired_pages():
+    """Regression: the capacity check compared only fresh-page demand against
+    free_pages, but free_pages also counts the LRU pool — reviving retired
+    shared pages consumes that same capacity, so admission over-committed and
+    leaned on later OutOfPages/preemption to recover."""
+    alloc = PagedAllocator(num_pages=6, page_size=4, max_pages_per_seq=16)
+    trie = PrefixCache(alloc)
+    s = ContinuousBatchScheduler(2, alloc, prefix_cache=trie)
+    prefix = list(range(100, 108))        # 2 full pages
+    cached = alloc.allocate(9, 8)
+    trie.insert(prefix, cached, 2)
+    alloc.free(9)                         # both pages retire to the LRU
+    alloc.allocate(8, 4)                  # 1 live page -> 2 free + 2 retired
+    assert alloc.free_pages == 4
+    s.add(Request(req_id="warm", max_new_tokens=4,
+                  prompt_tokens=np.array(prefix + list(range(8)), np.int32)))
+    # demand: 3 fresh pages (17 tokens -> 5 pages, 2 shared) + 2 revivals = 5
+    assert s.schedule().admit == []
+    assert alloc.retired_pages == 2       # nothing revived speculatively
+    alloc.free(8)                         # free_pages 5: demand now fits
+    d = s.schedule()
+    assert len(d.admit) == 1 and d.admit[0].cached_tokens == 8
+    alloc.check_invariants()
