@@ -19,11 +19,9 @@ latency constant is simulated (no physical network).
 from __future__ import annotations
 
 import asyncio
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.configs import tiny_config
 from repro.core import (EngineConfig, Gateway, InferenceEngine, Replica,
@@ -99,3 +97,22 @@ def warmup():
 
 def row(name: str, us_per_call: float, **derived) -> dict:
     return {"name": name, "us_per_call": us_per_call, "derived": derived}
+
+
+def stamp() -> dict:
+    """Provenance for persisted BENCH_*.json payloads: the git revision the
+    numbers came from plus a UTC timestamp, so a perf trajectory across PRs
+    can be reconstructed from the artifacts alone."""
+    import datetime
+    import os
+    import subprocess
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        rev = "unknown"
+    return {"git_rev": rev,
+            "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                         .isoformat(timespec="seconds")}

@@ -3,9 +3,11 @@ Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the paper-scale
 concurrency sweeps (slow on CPU); default is the quick profile.
 
 The ``prefill`` bench additionally persists its rows to ``BENCH_prefill.json``
-(TTFT/TPOT at 8/32/64 concurrency) and the ``prefix`` bench to
-``BENCH_prefix.json`` (warm-vs-cold TTFT under a shared system prompt) so
-subsequent PRs have a perf trajectory to regress against.
+(TTFT/TPOT at 8/32/64 concurrency), the ``prefix`` bench to
+``BENCH_prefix.json`` (warm-vs-cold TTFT under a shared system prompt), and
+the ``spec`` bench to ``BENCH_spec.json`` (speculative-vs-plain decode
+throughput) so subsequent PRs have a perf trajectory to regress against.
+Persisted payloads are stamped with the git revision and a UTC timestamp.
 """
 from __future__ import annotations
 
@@ -14,7 +16,8 @@ import json
 import sys
 import time
 
-PERSIST_JSON = {"prefill": "BENCH_prefill.json", "prefix": "BENCH_prefix.json"}
+PERSIST_JSON = {"prefill": "BENCH_prefill.json", "prefix": "BENCH_prefix.json",
+                "spec": "BENCH_spec.json"}
 
 
 def main() -> None:
@@ -22,15 +25,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names "
-                         "(fig2,fig5,fig6,fig7,table1,fig8,kernels,prefill,prefix)")
+                         "(fig2,fig5,fig6,fig7,table1,fig8,kernels,prefill,"
+                         "prefix,spec)")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_fig2_breakdown, bench_fig5_endpoints,
                             bench_fig6_breakdown, bench_fig7_throughput,
                             bench_fig8_parallelism, bench_kernels,
-                            bench_prefill, bench_prefix, bench_table1_streaming)
-    from benchmarks.common import warmup
+                            bench_prefill, bench_prefix, bench_spec,
+                            bench_table1_streaming)
+    from benchmarks.common import stamp, warmup
 
     benches = {
         "fig2": bench_fig2_breakdown,
@@ -42,8 +47,13 @@ def main() -> None:
         "kernels": bench_kernels,
         "prefill": bench_prefill,
         "prefix": bench_prefix,
+        "spec": bench_spec,
     }
     selected = args.only.split(",") if args.only else list(benches)
+    unknown = [n for n in selected if n not in benches]
+    if unknown:
+        ap.error(f"unknown bench name(s): {', '.join(unknown)} "
+                 f"(registered: {', '.join(benches)})")
 
     print("name,us_per_call,derived")
     warmup()
@@ -60,8 +70,8 @@ def main() -> None:
             print(f"{r['name']},{r['us_per_call']:.1f},\"{derived}\"", flush=True)
         if name in PERSIST_JSON:
             with open(PERSIST_JSON[name], "w") as f:
-                json.dump({"bench": name, "quick": quick, "rows": rows},
-                          f, indent=2, default=str)
+                json.dump({"bench": name, "quick": quick, **stamp(),
+                           "rows": rows}, f, indent=2, default=str)
             print(f"# wrote {PERSIST_JSON[name]}", file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 

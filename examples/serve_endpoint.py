@@ -8,7 +8,6 @@ decomposition, comparing the baseline (FastAPI-style) and ScaleLLM gateways.
 import asyncio
 
 import jax
-import numpy as np
 
 from repro.configs import tiny_config
 from repro.core import (EngineConfig, Gateway, InferenceEngine, MetricsSink,

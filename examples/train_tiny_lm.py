@@ -6,7 +6,6 @@ resumes from the latest checkpoint and reproduces the uninterrupted loss).
     PYTHONPATH=src python examples/train_tiny_lm.py --steps 200
 """
 import argparse
-import os
 
 from repro.configs import tiny_config
 from repro.data.pipeline import DataConfig

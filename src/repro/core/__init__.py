@@ -9,6 +9,7 @@ from repro.core.replica import Replica
 from repro.core.router import NoReplicaAvailable, ReplicaRouter, RouterConfig
 from repro.core.scheduler import ContinuousBatchScheduler
 from repro.core.serde import CODECS
+from repro.core.spec import PromptLookupDraft, target_probs, verify_draft
 
 __all__ = [
     "EngineConfig", "InferenceEngine", "TokenEvent",
@@ -18,4 +19,5 @@ __all__ = [
     "request_metrics", "summarize", "MetricsSink", "Replica",
     "NoReplicaAvailable", "ReplicaRouter", "RouterConfig",
     "ContinuousBatchScheduler", "CODECS",
+    "PromptLookupDraft", "target_probs", "verify_draft",
 ]

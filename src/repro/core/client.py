@@ -7,14 +7,13 @@ from __future__ import annotations
 
 import asyncio
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List
 
 import numpy as np
 
 from repro.core.gateway import Gateway
-from repro.core.metrics import Request, now, summarize
+from repro.core.metrics import Request, now
 from repro.core.serde import CODECS
-from repro.data.workload import WorkloadSpec, sample_workload
 
 
 @dataclass

@@ -36,6 +36,7 @@ import numpy as np
 from repro.core.kv_cache import PagedAllocator, PrefixCache
 from repro.core.metrics import Request, now
 from repro.core.scheduler import ContinuousBatchScheduler, SlotState
+from repro.core.spec import PromptLookupDraft, verify_draft
 from repro.models import LM, RunCtx
 
 # fixed operand width of the jitted COW page-copy call (pads with 0->0
@@ -59,6 +60,14 @@ class EngineConfig:
     enable_prefix_cache: bool = True  # shared-prefix KV reuse (auto-off for
                                       # ssm/encdec/vlm: pages alone don't
                                       # capture their recurrent/cross state)
+    enable_speculative: bool = False  # prompt-lookup drafting + multi-token
+                                      # verify on the chunk path (auto-off
+                                      # for ssm/hybrid: conv + recurrent
+                                      # carry advance on every fed token and
+                                      # cannot be rolled back per position)
+    spec_k: int = 4                   # max draft tokens per slot per step
+    spec_ngram_max: int = 3           # prompt-lookup suffix n-gram bounds
+    spec_ngram_min: int = 1
     eos_id: int = -1                  # -1: no EOS (length-controlled)
     host_overhead_s: float = 0.0      # baseline-engine emulation knob (benchmarks)
     cache_dtype: Any = jnp.float32
@@ -95,8 +104,8 @@ def sample_tokens(logits, key, temperature: float, top_p: float, greedy: bool):
     """logits (B, V) -> (B,) int32. Nucleus sampling with temperature."""
     if greedy or temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    l = logits.astype(jnp.float32) / temperature
-    sl, si = jax.lax.top_k(l, l.shape[-1])                  # descending sort
+    scaled = logits.astype(jnp.float32) / temperature
+    sl, si = jax.lax.top_k(scaled, scaled.shape[-1])                  # descending sort
     p = jax.nn.softmax(sl, axis=-1)
     keep = (jnp.cumsum(p, axis=-1) - p) < top_p             # first always kept
     sl = jnp.where(keep, sl, -jnp.inf)
@@ -128,6 +137,13 @@ class InferenceEngine:
         prefix_ok = (cfg.enable_prefix_cache and not has_ssm
                      and cfgm.encoder is None and cfgm.vision is None)
         self.prefix_cache = PrefixCache(self.allocator) if prefix_ok else None
+        # speculative decoding rolls KV back by a pure length decrement —
+        # sound for paged attention (pages are append-only and masked by
+        # ``lengths``), unsound for SSM/hybrid conv + recurrent carry.
+        self.spec_on = cfg.enable_speculative and cfg.spec_k > 0 and not has_ssm
+        self.spec_kmax = cfg.spec_k
+        self.draft_source = (PromptLookupDraft(cfg.spec_ngram_max, cfg.spec_ngram_min)
+                             if self.spec_on else None)
         self.scheduler = ContinuousBatchScheduler(
             cfg.max_slots, self.allocator, policy=cfg.scheduler, max_seq=cfg.max_seq,
             kv_extra=self.pos_offset, prefix_cache=self.prefix_cache)
@@ -144,9 +160,25 @@ class InferenceEngine:
         self._cow_jit = _cached_jit(
             "cow", model, self.ctx, sampling,
             lambda: jax.jit(self._copy_pages_fn, donate_argnums=(0,)))
+        # spec-sweep width ladder: one compiled variant per chunk width
+        # C = 1 + k for k in {1, 2, 4, ..., kmax}. The sweep picks the
+        # smallest width covering the iteration's longest draft, so compute
+        # (which scales with M*C regardless of how many rows carry drafts)
+        # tracks actual draft volume instead of always paying 1 + kmax.
+        self._spec_widths: List[int] = []
+        if self.spec_on:
+            k = 1
+            while k < self.spec_kmax:
+                self._spec_widths.append(1 + k)
+                k *= 2
+            self._spec_widths.append(1 + self.spec_kmax)
+        self._sampling = sampling
         self.steps = 0
         self.decode_tokens = 0
         self.prefill_tokens = 0
+        self.spec_steps = 0               # iterations that ran the verify sweep
+        self.drafted_tokens = 0           # draft tokens fed through verify
+        self.accepted_tokens = 0          # draft tokens accepted (committed)
         self.prefix_cached_tokens = 0     # prefill tokens skipped via cache hits
         self.iter_token_counts: deque = deque(maxlen=4096)
 
@@ -161,6 +193,27 @@ class InferenceEngine:
         nxt = sample_tokens(logits, key, self.cfg.temperature, self.cfg.top_p,
                             self.cfg.greedy)
         return jnp.where(nvalid > 0, nxt, 0), cache
+
+    def _spec_fn(self, params, cache, tokens, starts, nvalid, slots, first,
+                 page_table, key):
+        """Speculative decode sweep (DESIGN.md §3): every row feeds
+        [last_token, d_1 .. d_k] in one chunk, the head scores all fed
+        positions, and verify_draft turns the logits into (accepted-prefix
+        length, next committed token) per row."""
+        logits, cache = self.model.decode_chunk(
+            params, tokens, cache, starts, nvalid, slots, first, self.ctx,
+            page_table, all_logits=True)
+        n_acc, out = verify_draft(logits, tokens, nvalid, key,
+                                  self.cfg.temperature, self.cfg.top_p,
+                                  self.cfg.greedy)
+        return n_acc, jnp.where(nvalid > 0, out, 0), cache
+
+    def _spec_jit_for(self, width: int):
+        """Compiled spec sweep for chunk width C = ``width`` (lazy, cached
+        process-wide like the step fn — one entry per ladder width)."""
+        return _cached_jit(
+            f"spec{width}", self.model, self.ctx, self._sampling,
+            lambda: jax.jit(self._spec_fn, donate_argnums=(1,)))
 
     def _copy_pages_fn(self, cache, src, dst):
         """Device-side page copy (the COW step): kp/vp[:, dst] = kp/vp[:, src]
@@ -262,6 +315,7 @@ class InferenceEngine:
             if r.t2 == 0.0:
                 r.t2 = now()
             st.admitted_at = now()
+            st.spec_k = self.spec_kmax if self.spec_on else 0
             self.prefix_cached_tokens += st.cached_tokens
             if st.feed_len + self.pos_offset >= cfg.max_seq:
                 # prompt can never fit max_seq: fail fast with zero tokens
@@ -355,22 +409,43 @@ class InferenceEngine:
         decode_sts = [st for st in plan.decode if _live(st) and st.last_token >= 0]
         decode_sts += [st for st, _ in grants
                        if _live(st) and not st.prefilling and st.last_token >= 0]
+        # prompt-lookup drafting for slots the plan granted draft tokens:
+        # match the slot's recent suffix against its own prompt+output
+        # history; cap so the draft tail never runs past max_seq.
+        drafts: Dict[int, List[int]] = {}
+        if self.spec_on:
+            for st in decode_sts:
+                g = min(plan.draft.get(st.slot, 0),
+                        cfg.max_seq - 1 - self.pos_offset - st.fed)
+                if g > 0:
+                    d = self.draft_source.propose(st.all_tokens, g)
+                    if d:
+                        drafts[st.slot] = d
         dec_copies: List[Tuple[int, int]] = []
         for st in list(decode_sts):
             if st.slot not in self.scheduler.running:      # preempted by an earlier grow
                 decode_sts.remove(st)
                 continue
-            if not self.scheduler.grow_for_decode(st.slot):
+            k_i = len(drafts.get(st.slot, ()))
+            grown = self.scheduler.grow_for_tokens(st.slot, st.fed + 1 + k_i)
+            if not grown and k_i:
+                drafts.pop(st.slot, None)                  # retry draft-free
+                k_i = 0
+                grown = self.scheduler.grow_for_decode(st.slot)
+            if not grown:
                 decode_sts.remove(st)                      # paused/unschedulable
                 continue
             if self.prefix_cache is not None:
-                blk = (self.pos_offset + st.fed) // cfg.page_size
-                if not self.scheduler.make_writable(st.slot, blk, blk,
+                lo = (self.pos_offset + st.fed) // cfg.page_size
+                hi = (self.pos_offset + st.fed + k_i) // cfg.page_size
+                if not self.scheduler.make_writable(st.slot, lo, hi,
                                                     dec_copies):
                     decode_sts.remove(st)
                     continue
             self.page_table[st.slot] = self.allocator.page_table_row(st.slot)
         decode_sts = [st for st in decode_sts if st.slot in self.scheduler.running]
+        live = {st.slot for st in decode_sts}
+        drafts = {s: d for s, d in drafts.items() if s in live}
         if dec_copies:
             self._apply_copies(dec_copies)                 # before the decode writes
         if not decode_sts:
@@ -383,6 +458,10 @@ class InferenceEngine:
         for s in range(M):
             if s not in self.scheduler.running:
                 self.page_table[s] = 0
+        if drafts:
+            iter_tokens = self._spec_sweep(decode_sts, drafts, events, iter_tokens)
+            self.iter_token_counts.append(iter_tokens)
+            return events
         tokens = np.zeros((M, 1), np.int32)
         starts = np.zeros((M,), np.int32)
         nvalid = np.zeros((M,), np.int32)
@@ -412,6 +491,76 @@ class InferenceEngine:
                 self._finish(st)
         self.iter_token_counts.append(iter_tokens)
         return events
+
+    def _spec_sweep(self, decode_sts: List[SlotState], drafts: Dict[int, List[int]],
+                    events: List[TokenEvent], iter_tokens: int) -> int:
+        """One speculative decode iteration over all decode-ready slots
+        (draft-free slots ride along as plain chunks of 1). Feeds
+        [last_token, d_1 .. d_k] per row, commits the accepted prefix plus
+        the bonus/corrected token, and rolls rejected KV back by truncating
+        the slot's page tail (pages are append-only; positions at or past
+        ``fed`` are never read and are overwritten by the next write)."""
+        cfg = self.cfg
+        M = cfg.max_slots
+        kcap = max(len(d) for d in drafts.values())
+        C = next(w for w in self._spec_widths if w >= 1 + kcap)
+        tokens = np.zeros((M, C), np.int32)
+        starts = np.zeros((M,), np.int32)
+        nvalid = np.zeros((M,), np.int32)
+        for st in decode_sts:
+            d = drafts.get(st.slot, [])
+            tokens[st.slot, 0] = st.last_token
+            if d:
+                tokens[st.slot, 1:1 + len(d)] = d
+            starts[st.slot] = st.fed
+            nvalid[st.slot] = 1 + len(d)
+        n_acc, out, self.cache = self._spec_jit_for(C)(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(starts),
+            jnp.asarray(nvalid), jnp.asarray(np.arange(M, dtype=np.int32)),
+            jnp.asarray(np.zeros((M,), bool)), jnp.asarray(self.page_table),
+            self._next_key())
+        n_acc, out = np.asarray(n_acc), np.asarray(out)
+        t_emit = now()
+        self.spec_steps += 1
+        for st in decode_sts:
+            d = drafts.get(st.slot, [])
+            k_i = len(d)
+            na = int(n_acc[st.slot])
+            committed = d[:na] + [int(out[st.slot])]
+            iter_tokens += 1 + k_i         # all fed tokens count, rejected too
+            self.drafted_tokens += k_i
+            self.accepted_tokens += na
+            if k_i:
+                # adapt K additively: +1 on full acceptance, -1 only when
+                # the whole draft was rejected, hold on partial acceptance.
+                # Partial acceptance still amortizes the sweep (the verify
+                # chunk is one batched call), so only a slot that keeps
+                # drafting garbage shrinks toward k=1 — which also narrows
+                # the sweep width via the compiled-width ladder.
+                if na == k_i:
+                    st.spec_k = min(self.spec_kmax, st.spec_k + 1)
+                elif na == 0:
+                    st.spec_k = max(1, st.spec_k - 1)
+            fin = False
+            for tok in committed:
+                st.fed += 1                # commits the KV of the PREVIOUS token
+                st.last_token = tok
+                st.all_tokens.append(tok)
+                st.request.generated.append(tok)
+                self.decode_tokens += 1
+                fin = self._check_finished(st, tok)
+                events.append(TokenEvent(st.request, tok, t_emit, fin))
+                if fin:
+                    self._finish(st)       # frees every page, rollback included
+                    break
+            if not fin and na < k_i:
+                # rollback the rejected tail: keep pages through the next
+                # decode write (position fed), drop pages grown only for
+                # rejected drafts. Never touches registered prompt blocks —
+                # they precede fed by construction.
+                self.scheduler.shrink_to_tokens(st.slot,
+                                                self.pos_offset + st.fed + 1)
+        return iter_tokens
 
     def _check_finished(self, st: SlotState, tok: int) -> bool:
         r = st.request
@@ -452,6 +601,11 @@ class InferenceEngine:
             "retired_pages": float(self.allocator.retired_pages),
             "preemptions": float(self.scheduler.n_preemptions),
             "kv_utilization": self.allocator.utilization(),
+            "spec_steps": float(self.spec_steps),
+            "drafted_tokens": float(self.drafted_tokens),
+            "accepted_tokens": float(self.accepted_tokens),
+            "spec_acceptance_rate": (self.accepted_tokens / self.drafted_tokens
+                                     if self.drafted_tokens else 0.0),
         }
 
     def cancel(self, req_id: str) -> bool:

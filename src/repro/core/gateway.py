@@ -23,8 +23,8 @@ through asyncio queues (events cross from replica threads via
 from __future__ import annotations
 
 import asyncio
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Set
+from dataclasses import dataclass
+from typing import Dict, Optional, Set
 
 import numpy as np
 

@@ -199,6 +199,20 @@ class PagedAllocator:
             self._decref(p)
         return len(owned)
 
+    def truncate(self, slot: int, n_pages: int) -> int:
+        """Release the slot's trailing pages beyond its first ``n_pages``
+        (speculative-decode rollback: pages grown for rejected draft tokens
+        go straight back). Each dropped page is decref'd — a shared page
+        loses one reference, a trie-registered page retires to the LRU pool
+        with its content intact, an exclusive uncached page returns to the
+        free list. Returns the number of pages dropped."""
+        owned = self._owned.get(slot, [])
+        dropped = 0
+        while len(owned) > max(n_pages, 0):
+            self._decref(owned.pop())
+            dropped += 1
+        return dropped
+
     # ---------------- prefix-cache hooks ----------------
     def mark_cached(self, page: int) -> None:
         self._cached.add(page)

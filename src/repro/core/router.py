@@ -24,9 +24,8 @@ from __future__ import annotations
 import copy
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
-import numpy as np
 
 from repro.core.engine import TokenEvent
 from repro.core.metrics import Request

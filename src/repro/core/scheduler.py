@@ -28,8 +28,6 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
-import numpy as np
-
 from repro.core.kv_cache import OutOfPages, PagedAllocator, PrefixCache
 from repro.core.metrics import Request
 
@@ -46,6 +44,7 @@ class SlotState:
     order: int = 0                 # admission sequence number (preemption victim choice)
     cached_tokens: int = 0         # prefix-cache hit: tokens whose prefill was skipped
     registered_blocks: int = 0     # prompt pages already inserted into the prefix trie
+    spec_k: int = 0                # draft-token allowance (engine-adapted; 0 = no drafting)
 
     @property
     def prefilling(self) -> bool:
@@ -60,12 +59,15 @@ class Decisions:
 @dataclass
 class IterationPlan:
     """One token-budget iteration: freshly admitted slots, prefill-chunk
-    grants (slot, n_tokens), and the decode-ready set. Token accounting:
-    sum of grant costs + len(decode) <= budget, where a grant that completes
-    a slot's feed costs n+1 (the slot decodes in the same iteration)."""
+    grants (slot, n_tokens), the decode-ready set, and per-slot draft-token
+    grants (speculative decoding; slot -> extra tokens the decode row may
+    feed this iteration). Token accounting: sum of grant costs + len(decode)
+    + sum(draft grants) <= budget, where a prefill grant that completes a
+    slot's feed costs n+1 (the slot decodes in the same iteration)."""
     admit: List[SlotState] = field(default_factory=list)
     prefill: List[Tuple[SlotState, int]] = field(default_factory=list)
     decode: List[SlotState] = field(default_factory=list)
+    draft: Dict[int, int] = field(default_factory=dict)
 
 
 class ContinuousBatchScheduler:
@@ -185,6 +187,19 @@ class ContinuousBatchScheduler:
         plan.decode = [st for st in self.running.values()
                        if not st.prefilling and st.last_token >= 0]
         spent = len(plan.decode)
+        # speculative draft grants: after every decode slot's guaranteed
+        # token, leftover budget buys draft tokens (oldest slot first) up to
+        # each slot's adaptive allowance. Draft tokens compete with prefill
+        # chunks for the same budget — a draft the verify step rejects was
+        # still fed through the model.
+        for st in sorted(plan.decode, key=lambda s: s.order):
+            if st.spec_k <= 0:
+                continue
+            g = min(st.spec_k, budget - spent)
+            if g <= 0:
+                break
+            plan.draft[st.slot] = g
+            spent += g
         prefilling = sorted((st for st in self.running.values() if st.prefilling),
                             key=lambda st: st.order)
         for st in prefilling:
@@ -242,6 +257,14 @@ class ContinuousBatchScheduler:
         """Ensure slot has a page for one more token; preempt others if the
         policy allows. Returns False if the slot itself must pause."""
         return self.grow_for_tokens(slot, self.running[slot].fed + 1)
+
+    def shrink_to_tokens(self, slot: int, n_tokens: int) -> int:
+        """Rollback partner of ``grow_for_tokens``: drop pages past those
+        covering ``n_tokens`` kv entries (plus the kv_extra prefix). Used
+        after speculative verify rejects draft tokens, so pages grown for a
+        rejected tail never sit idle under page pressure."""
+        keep = self.allocator.pages_needed(self.kv_extra + n_tokens)
+        return self.allocator.truncate(slot, keep)
 
     def make_writable(self, slot: int, first_block: int, last_block: int,
                       copies: List[Tuple[int, int]]) -> bool:

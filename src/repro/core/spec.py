@@ -1,0 +1,140 @@
+"""Speculative decoding on the chunk path (DESIGN.md §3).
+
+Two pieces live here, both free of engine state:
+
+  PromptLookupDraft   the draft source: prompt-lookup (n-gram) drafting
+                      (Saxena's assisted-generation trick, used by vLLM's
+                      ``speculative_model="[ngram]"``). A slot's recent
+                      token suffix is matched against its own prompt+output
+                      history; the tokens that followed the most recent
+                      earlier occurrence become the draft. No second model,
+                      no extra weights — ideal for extractive (RAG-style)
+                      traffic where the model copies spans of the prompt.
+
+  verify_draft        the accept/reject rule applied to the target model's
+                      chunk logits (``LM.decode_chunk(all_logits=True)``
+                      scores all K+1 fed tokens in one step). Greedy
+                      requests accept a draft token iff it equals the
+                      argmax — output is bit-identical to non-speculative
+                      decoding. Sampled requests use rejection sampling
+                      against the temperature/top-p target distribution:
+                      a draft token x (point-mass proposal) is accepted
+                      with probability p(x); on rejection the replacement
+                      is drawn from the residual p with x removed and
+                      renormalized — the committed stream is distributed
+                      exactly as non-speculative sampling (Leviathan et
+                      al. 2211.17192, specialized to a deterministic
+                      proposal).
+
+Everything here is pure: the engine owns KV rollback and page accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class PromptLookupDraft:
+    """Prompt-lookup n-gram drafting over a slot's token history.
+
+    ``propose`` tries suffix n-grams from ``ngram_max`` down to
+    ``ngram_min``; the first n with an earlier occurrence wins, and the
+    (up to k) tokens following its most recent occurrence are the draft.
+    Returns [] when nothing matches — the slot decodes normally.
+    """
+    ngram_max: int = 3
+    ngram_min: int = 1
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        L = len(tokens)
+        if k <= 0 or L < self.ngram_min + 1:
+            return []
+        toks = tokens if isinstance(tokens, list) else [int(t) for t in tokens]
+        for n in range(min(self.ngram_max, L - 1), self.ngram_min - 1, -1):
+            suffix = toks[L - n:]
+            # scan most-recent-first for an earlier occurrence ending
+            # strictly before the final suffix; start <= L-n-1 guarantees at
+            # least one continuation token. A backward scan is O(1) on the
+            # common case (repetitive history matches near the tail) where a
+            # vectorized all-positions match would pay O(L*n) every call.
+            for start in range(L - n - 1, -1, -1):
+                if toks[start:start + n] == suffix:
+                    draft = toks[start + n:start + n + k]
+                    # a match close to the tail implies a cycle of period
+                    # L - n - start; extend the short continuation
+                    # periodically so runs ("x x x") and short cycles fill
+                    # the full k-token draft instead of 1-2 tokens
+                    period = L - n - start
+                    while len(draft) < k:
+                        draft.append(draft[len(draft) - period])
+                    return draft
+        return []
+
+
+def target_probs(logits, temperature: float, top_p: float):
+    """The engine's sampling distribution as explicit probabilities:
+    temperature-scaled softmax truncated to the top-p nucleus and
+    renormalized (the first token of the sorted order is always kept,
+    mirroring ``sample_tokens``). logits (..., V) -> probs (..., V) f32."""
+    scaled = logits.astype(jnp.float32) / temperature
+    sl, si = jax.lax.top_k(scaled, scaled.shape[-1])         # descending
+    p = jax.nn.softmax(sl, axis=-1)
+    keep = (jnp.cumsum(p, axis=-1) - p) < top_p
+    p_kept = jax.nn.softmax(jnp.where(keep, sl, -jnp.inf), axis=-1)
+    inv = jnp.argsort(si, axis=-1)                           # back to vocab order
+    return jnp.take_along_axis(p_kept, inv, axis=-1)
+
+
+def verify_draft(logits, tokens, nvalid, key, temperature: float,
+                 top_p: float, greedy: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Accept/reject one speculative chunk per row.
+
+    logits (M, C, V): decode_chunk(all_logits=True) output for rows that fed
+    ``tokens`` (M, C) = [last_token, d_1 .. d_K] (C = 1 + K); row position j
+    scores the token at index j+1. nvalid (M,): tokens actually fed per row
+    (1 + k_i; 0 = inactive row).
+
+    Returns (n_acc (M,), out (M,)): the length of the accepted draft prefix
+    and the token to commit after it — the bonus token when every draft was
+    accepted, the greedy/residual-sampled correction otherwise. Committing
+    d_1..d_{n_acc} then ``out`` reproduces the non-speculative engine
+    exactly (bit-identical for greedy, in distribution for sampling).
+    """
+    M, C, _ = logits.shape
+    K = C - 1
+    drafts = tokens[:, 1:].astype(jnp.int32)                 # (M, K)
+    valid = jnp.arange(K)[None, :] < (nvalid[:, None] - 1)
+    k_acc, k_out = jax.random.split(key)
+    det = greedy or temperature <= 0.0
+    if det:
+        pred = jnp.argmax(logits[:, :K], axis=-1).astype(jnp.int32)
+        acc = (pred == drafts) & valid
+    else:
+        p = target_probs(logits[:, :K], temperature, top_p)  # (M, K, V)
+        p_draft = jnp.take_along_axis(p, drafts[..., None], axis=-1)[..., 0]
+        u = jax.random.uniform(k_acc, (M, K))
+        acc = (u < p_draft) & valid                          # q is a point mass
+    n_acc = jnp.cumprod(acc.astype(jnp.int32), axis=1).sum(axis=1)
+
+    sel = jnp.take_along_axis(logits, n_acc[:, None, None], axis=1)[:, 0]
+    if det:
+        out = jnp.argmax(sel, axis=-1).astype(jnp.int32)
+    else:
+        p_sel = target_probs(sel, temperature, top_p)        # (M, V)
+        rejected = jnp.take_along_axis(
+            tokens.astype(jnp.int32), jnp.minimum(n_acc + 1, C - 1)[:, None],
+            axis=1)[:, 0]
+        had_reject = n_acc < (nvalid - 1)
+        hit = jnp.arange(p_sel.shape[-1])[None, :] == rejected[:, None]
+        p_res = jnp.where(hit & had_reject[:, None], 0.0, p_sel)
+        # gumbel-argmax over the unnormalized residual == categorical over
+        # the renormalized residual; a rejected token with p(x) == 1 cannot
+        # reach here (its rejection probability is 0)
+        g = jax.random.gumbel(k_out, p_res.shape)
+        out = jnp.argmax(jnp.where(p_res > 0, jnp.log(p_res), -jnp.inf) + g,
+                         axis=-1).astype(jnp.int32)
+    return n_acc, out

@@ -31,6 +31,15 @@ class WorkloadSpec:
     # benches). 0 disables.
     shared_prefix_len: int = 0
     n_shared_prefixes: int = 1
+    # repetition-friendly (RAG-style extractive) traffic for the speculative-
+    # decoding benches: a fraction of prompts are [passage, query, passage]
+    # (the grounding span appears twice, as in retrieval-augmented serving)
+    # and a fraction are periodic boilerplate (a short motif tiled to the
+    # prompt length, as in templated/form traffic). Both give prompt-lookup
+    # drafting earlier n-gram occurrences to match. 0 disables (default).
+    extractive_frac: float = 0.0
+    boilerplate_frac: float = 0.0
+    boilerplate_period: int = 4
 
 
 def sample_workload(spec: WorkloadSpec) -> Tuple[List[np.ndarray], List[int]]:
@@ -46,6 +55,18 @@ def sample_workload(spec: WorkloadSpec) -> Tuple[List[np.ndarray], List[int]]:
     ).astype(int)
     outs = np.maximum(outs, 2)
     prompts = [rng.integers(1, spec.vocab, n).astype(np.int32) for n in lens]
+    shapes = rng.random(spec.n_requests)
+    for i, n in enumerate(lens):
+        if shapes[i] < spec.extractive_frac and n >= 8:
+            # passage + query + passage: the passage span repeats verbatim
+            q = max(n // 8, 2)
+            passage = rng.integers(1, spec.vocab, (n - q + 1) // 2).astype(np.int32)
+            query = rng.integers(1, spec.vocab, q).astype(np.int32)
+            prompts[i] = np.concatenate([passage, query, passage])[:n]
+        elif shapes[i] < spec.extractive_frac + spec.boilerplate_frac and n >= 4:
+            per = max(min(spec.boilerplate_period, n // 2), 1)
+            motif = rng.integers(1, spec.vocab, per).astype(np.int32)
+            prompts[i] = np.tile(motif, -(-n // per))[:n]
     if spec.shared_prefix_len > 0:
         prefixes = [rng.integers(1, spec.vocab, spec.shared_prefix_len).astype(np.int32)
                     for _ in range(max(spec.n_shared_prefixes, 1))]

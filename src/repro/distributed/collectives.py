@@ -8,7 +8,6 @@ compression is unbiased in the long run. Cuts the gradient all-reduce bytes
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

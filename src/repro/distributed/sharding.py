@@ -15,8 +15,8 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -97,8 +97,8 @@ def _flash_kernel(
 
     @pl.when(ik == num_kv_blocks - 1)
     def _finalize():
-        l = l_scr[:, 0:1]
-        out = jnp.where(l > 0.0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0)
+        denom = l_scr[:, 0:1]
+        out = jnp.where(denom > 0.0, acc_scr[...] / jnp.maximum(denom, 1e-30), 0.0)
         o_ref[0] = out.astype(o_ref.dtype)
 
 

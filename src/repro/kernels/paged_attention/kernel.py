@@ -95,8 +95,8 @@ def _paged_kernel(
 
     @pl.when(p == max_pages - 1)
     def _finalize():
-        l = l_scr[:, 0:1]
-        out = jnp.where(l > 0.0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0)
+        denom = l_scr[:, 0:1]
+        out = jnp.where(denom > 0.0, acc_scr[...] / jnp.maximum(denom, 1e-30), 0.0)
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
@@ -220,8 +220,8 @@ def _chunked_prefill_kernel(
 
     @pl.when(p == max_pages - 1)
     def _finalize():
-        l = l_scr[:, 0:1]
-        out = jnp.where(l > 0.0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0)
+        denom = l_scr[:, 0:1]
+        out = jnp.where(denom > 0.0, acc_scr[...] / jnp.maximum(denom, 1e-30), 0.0)
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 

@@ -77,7 +77,8 @@ def ssd_scan_pallas(
     assert Q == chunk
     kernel = functools.partial(_ssd_kernel, chunk=chunk)
     grid = (BH, nc)
-    spec3 = lambda d: pl.BlockSpec((1, 1, Q, d), lambda b, c: (b, c, 0, 0))
+    def spec3(d):
+        return pl.BlockSpec((1, 1, Q, d), lambda b, c: (b, c, 0, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -5,7 +5,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 
 def load_cells(dryrun_dir: str) -> List[dict]:

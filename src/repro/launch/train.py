@@ -9,7 +9,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.configs import get_config, tiny_config
+from repro.configs import tiny_config
 from repro.data.pipeline import DataConfig
 from repro.models import build_model
 from repro.training.train_step import TrainConfig

@@ -1,8 +1,8 @@
 """Shared model-runtime context and small layer primitives."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Any, Optional
+from dataclasses import dataclass, replace
+from typing import Any
 
 import jax
 import jax.numpy as jnp

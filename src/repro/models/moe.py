@@ -20,7 +20,6 @@ All strategies share the router and are validated against each other.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Tuple
 
 import jax

@@ -12,7 +12,6 @@ each leaf shaped (23, ...).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple

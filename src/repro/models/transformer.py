@@ -12,8 +12,7 @@ consumes either dense ring-buffer caches or the paged KV pool.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -289,7 +288,8 @@ class LM:
         return logits[:, 0], new_cache
 
     def decode_chunk(self, params, tokens, cache, starts, nvalid, slots, first,
-                     ctx: RunCtx, page_table, frames=None, patches=None):
+                     ctx: RunCtx, page_table, frames=None, patches=None,
+                     all_logits: bool = False):
         """Unified serving iteration over a paged cache (DESIGN.md §2): each
         batch row feeds a chunk of up to C tokens of one sequence — C == 1 is
         decode, C > 1 is a prefill chunk. KV goes straight into the paged
@@ -306,7 +306,10 @@ class LM:
         occupies kv positions [0, n_patches).
 
         Returns (logits (B, vocab) at each row's last valid position,
-        new_cache).
+        new_cache). With ``all_logits`` the head runs on every token
+        position instead — (B, C, vocab), patch-prefix positions dropped —
+        which is the verify step of speculative decoding (DESIGN.md §3):
+        position j scores the token fed at index j+1.
         """
         cfg = self.cfg
         if cfg.vision is not None and any("M" in g.pattern for g in cfg.layer_groups):
@@ -346,6 +349,8 @@ class LM:
             positions=positions, memory=memory, page_table=page_table,
             lengths=lengths, chunk=pack)
         x = rmsnorm(x, params["final_norm"]["w"], cfg.rms_eps)
+        if all_logits:
+            return self._head(params, x[:, n_prefix:]), new_cache
         last = n_prefix + jnp.maximum(nvalid, 1) - 1
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
         logits = self._head(params, x_last)

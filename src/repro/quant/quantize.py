@@ -9,7 +9,6 @@
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, NamedTuple, Tuple
 
 import jax

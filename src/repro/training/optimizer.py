@@ -7,7 +7,6 @@ PartitionSpecs), which is what makes FSDP-style training memory work.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from typing import Any, NamedTuple
 
 import jax
@@ -21,7 +20,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         m=jax.tree.map(zeros, params),

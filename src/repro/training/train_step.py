@@ -5,7 +5,7 @@ jit/pjit-able with sharded params (FSDP rules from distributed.sharding).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.distributed.collectives import (compress_grads_with_feedback,
                                            decompress_grads, zeros_error_like)
 from repro.models import LM, RunCtx
-from repro.training.optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.training.optimizer import adamw_init, adamw_update, cosine_schedule
 
 
 @dataclass(frozen=True)

@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, get_config, tiny_config
-from repro.data.pipeline import DataConfig, synthesize_batch
 from repro.models import RunCtx, build_model
 from repro.training.train_step import TrainConfig, make_train_step
 

@@ -152,6 +152,37 @@ def test_eviction_only_takes_refcount_zero_pages():
         a.allocate(3, 4)                  # nothing refcount-0 left to evict
 
 
+def test_truncate_exclusive_pages_return_to_free_list():
+    a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=8)
+    a.allocate(0, 16)                     # 4 pages
+    free_before = a.free_pages
+    assert a.truncate(0, 2) == 2          # speculative-rollback shape
+    assert len(a.owned(0)) == 2
+    assert a.free_pages == free_before + 2
+    assert a.truncate(0, 2) == 0          # idempotent at the target size
+    a.check_invariants()
+
+
+def test_truncate_shared_and_cached_pages():
+    a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=8)
+    pages = a.allocate(0, 12)             # 3 pages
+    a.share(1, pages)                     # slot 1 references all three
+    a.mark_cached(pages[2])
+    # rolling slot 1 back to 1 page must not free pages slot 0 still owns:
+    # the shared tail pages just lose one reference; the cached page stays
+    # cached (it still has a live reference via slot 0)
+    assert a.truncate(1, 1) == 2
+    assert a.owned(1) == [pages[0]]
+    assert a.refcount(pages[0]) == 2      # still shared by both slots
+    assert a.refcount(pages[1]) == 1 and a.refcount(pages[2]) == 1
+    assert a.retired_pages == 0
+    a.check_invariants()
+    # when the cached page's last reference drops it retires, not frees
+    assert a.truncate(0, 2) == 1
+    assert a.retired_pages == 1
+    a.check_invariants()
+
+
 def test_page_table_row():
     a = PagedAllocator(num_pages=16, page_size=4, max_pages_per_seq=4)
     a.allocate(3, 7)
@@ -164,7 +195,8 @@ def test_page_table_row():
 # ---------------------------------------------------------------------------
 # Refcount/COW/trie property suite. Ops model the engine's real call pattern:
 # admit (lookup+share then allocate), feed (insert full prompt blocks into the
-# trie), write (ensure_exclusive over a block range), release (free). The
+# trie), write (ensure_exclusive over a block range), rollback (truncate the
+# page tail after a rejected speculative draft), release (free). The
 # allocator invariants (sum of refcounts == ownership counts; referenced +
 # free + retired == total - 1; cached pages live or retired) are re-checked
 # after every op, plus: COW only ever detaches shared/cached pages and always
@@ -220,6 +252,23 @@ def _run_refcount_trace(trace):
                 # the written range is now exclusively owned and uncached
                 for p in a.owned(slot)[lo:]:
                     assert a.refcount(p) == 1 and p not in a._cached
+        elif op == "rollback" and slot in slot_pid:
+            # speculative-decode rollback: grow for draft tokens, then drop
+            # the tail pages as if verify rejected the drafts. Shared pages
+            # must only lose a reference, cached pages must retire (never
+            # free), and the trie must never see the rolled-back pages.
+            owned_before = list(a.owned(slot))
+            keep = pid % (len(owned_before) + 1)
+            shared_tail = [p for p in owned_before[keep:] if a.refcount(p) > 1]
+            cached_tail = [p for p in owned_before[keep:]
+                           if a.refcount(p) == 1 and p in a._cached]
+            dropped = a.truncate(slot, keep)
+            assert dropped == len(owned_before) - keep
+            assert a.owned(slot) == owned_before[:keep]
+            for p in shared_tail:
+                assert a.refcount(p) >= 1, "shared page freed by rollback"
+            for p in cached_tail:
+                assert a.retired(p), "cached page not retired by rollback"
         elif op == "release" and slot in slot_pid:
             a.free(slot)
             del slot_pid[slot]
@@ -238,7 +287,7 @@ def test_refcount_cow_trie_seeded_fuzz():
     for seed in range(8):
         rng = random.Random(seed)
         trace = [(rng.randrange(5),
-                  rng.choice(["admit", "feed", "write", "release"]),
+                  rng.choice(["admit", "feed", "write", "rollback", "release"]),
                   rng.randrange(4), rng.randint(1, 40))
                  for _ in range(120)]
         _run_refcount_trace(trace)
@@ -262,7 +311,8 @@ if st is not None:
 
     _OPS = st.lists(
         st.tuples(st.integers(0, 4),          # slot
-                  st.sampled_from(["admit", "feed", "write", "release"]),
+                  st.sampled_from(["admit", "feed", "write", "rollback",
+                                   "release"]),
                   st.integers(0, 3),          # prompt id (content class)
                   st.integers(1, 40)),        # token count
         min_size=1, max_size=80)

@@ -1,6 +1,5 @@
 """Mamba2 SSD: the chunked algorithm vs a naive sequential recurrence oracle,
 and chunk-size invariance."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,8 +5,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.data.workload import WorkloadSpec, sample_workload
-from repro.launch.roofline import (RooflineTerms, V5E, model_flops,
-                                   parse_collective_bytes, roofline)
+from repro.launch.roofline import model_flops, parse_collective_bytes, roofline
 
 HLO = """
 ENTRY %main {

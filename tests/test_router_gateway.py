@@ -7,9 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import tiny_config
-from repro.core import (EngineConfig, Gateway, InferenceEngine, Replica,
-                        ReplicaRouter, RouterConfig, baseline_gateway_config,
-                        scale_gateway_config)
+from repro.core import EngineConfig, Gateway, InferenceEngine, Replica, ReplicaRouter, RouterConfig, scale_gateway_config
 from repro.core.client import merge_engine_timestamps, run_workload
 from repro.core.metrics import Request
 from repro.core.safety import Authenticator

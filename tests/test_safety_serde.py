@@ -1,5 +1,4 @@
 """Safety module (auth/rate-limit/content filter) + wire codecs."""
-import numpy as np
 import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st

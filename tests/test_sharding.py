@@ -8,8 +8,7 @@ from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.distributed.sharding import (cache_partition_specs, make_rules,
-                                        param_partition_specs, partition_spec)
+from repro.distributed.sharding import make_rules, param_partition_specs, partition_spec
 from repro.launch.mesh import make_dev_mesh
 from repro.models.params import param_specs
 

@@ -1,0 +1,255 @@
+"""Speculative decoding (DESIGN.md §3): prompt-lookup drafting, multi-token
+verify (greedy bit-identity + rejection-sampling exactness), KV rollback
+composition with preemption and the prefix cache, and SSM gating."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiny_config
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.metrics import Request
+from repro.core.spec import PromptLookupDraft, target_probs, verify_draft
+from repro.models import build_model
+
+ARCH = "qwen2.5-3b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config(ARCH)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _repetitive_prompts(vocab: int, n: int, seed: int = 3):
+    """Extractive/boilerplate-shaped prompts (the spec-friendly traffic)."""
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for i in range(n):
+        if i % 2 == 0:
+            passage = rng.integers(1, vocab, 12)
+            query = rng.integers(1, vocab, 4)
+            prompts.append(np.concatenate([passage, query, passage]).astype(np.int32))
+        else:
+            motif = rng.integers(1, vocab, 4)
+            prompts.append(np.tile(motif, 7).astype(np.int32))
+    return prompts
+
+
+def _gen(model, params, prompts, *, spec: bool, max_new: int = 24, **kw):
+    defaults = dict(max_slots=4, page_size=4, num_pages=256, max_seq=128,
+                    prefill_bucket=8, greedy=True)
+    defaults.update(kw)
+    eng = InferenceEngine(model, params, EngineConfig(
+        enable_speculative=spec, spec_k=4, **defaults))
+    reqs = [Request(req_id=f"{spec}-{kw.get('num_pages', 0)}-{i}",
+                    prompt_tokens=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    return eng, [r.generated for r in reqs]
+
+
+# ------------------------------------------------------------ draft source
+def test_prompt_lookup_continues_cycle():
+    ds = PromptLookupDraft(ngram_max=3, ngram_min=1)
+    assert ds.propose([1, 2, 3, 1, 2, 3, 1, 2], 5) == [3, 1, 2, 3, 1]
+
+
+def test_prompt_lookup_extends_runs_periodically():
+    ds = PromptLookupDraft()
+    assert ds.propose([7, 7, 7, 7], 4) == [7, 7, 7, 7]
+
+
+def test_prompt_lookup_prefers_most_recent_match():
+    ds = PromptLookupDraft(ngram_max=3, ngram_min=1)
+    # [9, 1] occurs twice; the draft continues the most recent occurrence
+    draft = ds.propose([9, 1, 5, 9, 1, 7, 9, 1], 3)
+    assert draft[0] == 7
+
+
+def test_prompt_lookup_no_match_and_empty_inputs():
+    ds = PromptLookupDraft()
+    assert ds.propose([1, 2, 3, 4], 4) == []
+    assert ds.propose([1, 2, 3, 4], 0) == []
+    assert ds.propose([1], 4) == []
+    assert ds.propose([], 4) == []
+
+
+def test_prompt_lookup_longer_ngram_wins():
+    ds = PromptLookupDraft(ngram_max=2, ngram_min=1)
+    # 2-gram [5, 6] matches at position 0 -> draft starts with 8; a 1-gram
+    # [6] match alone (position 4) would have drafted 9 instead
+    assert ds.propose([5, 6, 8, 2, 6, 9, 5, 6], 1) == [8]
+
+
+# ------------------------------------------------------------ verify_draft
+def _mk_logits(rows):
+    """rows: list of per-position argmax token ids -> (1, C, V) logits."""
+    V = 16
+    C = len(rows)
+    logits = np.full((1, C, V), -3.0, np.float32)
+    for j, t in enumerate(rows):
+        logits[0, j, t] = 5.0
+    return jnp.asarray(logits)
+
+
+def test_verify_greedy_full_acceptance_emits_bonus():
+    # model's argmax at positions 0..2 = [4, 5, 6]; drafts [4, 5] match
+    logits = _mk_logits([4, 5, 6])
+    tokens = jnp.asarray([[9, 4, 5]], jnp.int32)      # [last, d1, d2]
+    n_acc, out = verify_draft(logits, tokens, jnp.asarray([3]),
+                              jax.random.PRNGKey(0), 0.7, 0.9, greedy=True)
+    assert int(n_acc[0]) == 2 and int(out[0]) == 6    # bonus token
+
+
+def test_verify_greedy_rejection_emits_correction():
+    logits = _mk_logits([4, 5, 6])
+    tokens = jnp.asarray([[9, 4, 7]], jnp.int32)      # d2 != argmax 5
+    n_acc, out = verify_draft(logits, tokens, jnp.asarray([3]),
+                              jax.random.PRNGKey(0), 0.7, 0.9, greedy=True)
+    assert int(n_acc[0]) == 1 and int(out[0]) == 5    # corrected token
+
+
+def test_verify_respects_nvalid_mask():
+    logits = _mk_logits([4, 5, 6])
+    # row feeds only [last] (no drafts): padding draft columns must not count
+    tokens = jnp.asarray([[9, 4, 5]], jnp.int32)
+    n_acc, out = verify_draft(logits, tokens, jnp.asarray([1]),
+                              jax.random.PRNGKey(0), 0.7, 0.9, greedy=True)
+    assert int(n_acc[0]) == 0 and int(out[0]) == 4
+
+
+def test_verify_rejection_sampling_matches_target_distribution():
+    """Committing [draft if accepted else residual sample] must reproduce the
+    engine's sampling distribution exactly (Leviathan et al., deterministic
+    proposal): empirical marginal of the first committed token over many keys
+    == temperature/top-p target probs."""
+    rng = np.random.default_rng(1)
+    V, temp, top_p = 12, 0.9, 0.8
+    logits = jnp.asarray(rng.standard_normal((1, 2, V)) * 2.0, jnp.float32)
+    p_target = np.asarray(target_probs(logits[:, 0], temp, top_p))[0]
+
+    for draft_tok in (int(np.argsort(p_target)[-2]),   # in-nucleus token
+                      int(np.argmin(p_target))):       # usually zero-mass
+        tokens = jnp.asarray([[3, draft_tok]], jnp.int32)
+        nvalid = jnp.asarray([2])
+
+        def one(key):
+            n_acc, out = verify_draft(logits, tokens, nvalid, key,
+                                      temp, top_p, greedy=False)
+            return jnp.where(n_acc[0] >= 1, tokens[0, 1], out[0])
+
+        n = 4000
+        toks = np.asarray(jax.vmap(one)(jax.random.split(jax.random.PRNGKey(0), n)))
+        emp = np.bincount(toks, minlength=V) / n
+        assert np.abs(emp - p_target).max() < 0.035, (emp, p_target)
+
+
+# ------------------------------------------------------------ engine paths
+def test_engine_greedy_bit_identical(setup):
+    cfg, model, params = setup
+    prompts = _repetitive_prompts(cfg.vocab, 6)
+    base_eng, base = _gen(model, params, prompts, spec=False)
+    spec_eng, spec = _gen(model, params, prompts, spec=True)
+    assert base == spec
+    assert spec_eng.drafted_tokens > 0 and spec_eng.accepted_tokens > 0
+    assert spec_eng.stats()["spec_acceptance_rate"] > 0
+    spec_eng.allocator.check_invariants()
+    assert not spec_eng.allocator._ref, "pages leaked after all requests done"
+
+
+def test_engine_greedy_identical_under_preemption(setup):
+    """Tight page pool forces preempt/pause-resume; speculative growth and
+    rollback must preserve bit-identical output through it."""
+    cfg, model, params = setup
+    prompts = _repetitive_prompts(cfg.vocab, 6, seed=5)
+    kw = dict(num_pages=24, max_slots=4, token_budget=24)
+    base_eng, base = _gen(model, params, prompts, spec=False, **kw)
+    spec_eng, spec = _gen(model, params, prompts, spec=True, **kw)
+    assert base == spec
+    assert spec_eng.drafted_tokens > 0
+    spec_eng.allocator.check_invariants()
+    assert not spec_eng.allocator._ref
+
+
+def test_engine_greedy_identical_with_prefix_cache(setup):
+    """Speculative decode + shared-prefix COW: warm trie hits, drafting and
+    rollback compose; outputs stay bit-identical and rolled-back pages are
+    never left registered or referenced."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(9)
+    shared = rng.integers(1, cfg.vocab, 16).astype(np.int32)   # 4 full pages
+    prompts = [np.concatenate([shared, rng.integers(1, cfg.vocab, 6).astype(np.int32)])
+               for _ in range(5)]
+    outs = {}
+    engines = {}
+    for spec in (False, True):
+        eng = InferenceEngine(model, params, EngineConfig(
+            max_slots=4, page_size=4, num_pages=256, max_seq=128,
+            prefill_bucket=8, greedy=True, enable_prefix_cache=True,
+            enable_speculative=spec, spec_k=4))
+        # seed the trie, then run the batch warm
+        eng.generate([Request(req_id=f"seed{spec}", prompt_tokens=prompts[0],
+                              max_new_tokens=2)])
+        reqs = [Request(req_id=f"warm{spec}-{i}", prompt_tokens=p,
+                        max_new_tokens=20) for i, p in enumerate(prompts)]
+        eng.generate(reqs)
+        outs[spec] = [r.generated for r in reqs]
+        engines[spec] = eng
+    assert outs[False] == outs[True]
+    spec_eng = engines[True]
+    assert spec_eng.stats()["prefix_hit_rate"] > 0
+    assert spec_eng.drafted_tokens > 0
+    spec_eng.allocator.check_invariants()
+    assert not spec_eng.allocator._ref
+
+
+def test_engine_sampled_mode_runs_and_counts(setup):
+    """Sampled requests take the rejection-sampling verify path; the engine
+    must complete, count drafts, and leave no pages referenced."""
+    cfg, model, params = setup
+    prompts = _repetitive_prompts(cfg.vocab, 4)
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=4, page_size=4, num_pages=256, max_seq=128, prefill_bucket=8,
+        greedy=False, temperature=0.7, top_p=0.9,
+        enable_speculative=True, spec_k=4))
+    reqs = [Request(req_id=f"s{i}", prompt_tokens=p, max_new_tokens=16)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    assert all(len(r.generated) == 16 for r in reqs)
+    assert eng.drafted_tokens > 0
+    eng.allocator.check_invariants()
+    assert not eng.allocator._ref
+
+
+def test_ssm_arch_gates_speculation_off():
+    """Rollback is a pure KV-length decrement — unsound for SSM recurrent
+    state, so hybrid/SSM models silently disable speculation."""
+    cfg = tiny_config("mamba2-1.3b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = InferenceEngine(model, params, EngineConfig(
+        max_slots=2, page_size=4, num_pages=64, max_seq=64, prefill_bucket=8,
+        greedy=True, enable_speculative=True, spec_k=4))
+    assert not eng.spec_on
+    rng = np.random.default_rng(0)
+    reqs = [Request(req_id=f"m{i}", prompt_tokens=np.tile(rng.integers(1, cfg.vocab, 4), 4).astype(np.int32),
+                    max_new_tokens=8) for i in range(2)]
+    eng.generate(reqs)
+    assert all(len(r.generated) == 8 for r in reqs)
+    assert eng.drafted_tokens == 0 and eng.spec_steps == 0
+
+
+def test_stats_surface_spec_counters(setup):
+    cfg, model, params = setup
+    prompts = _repetitive_prompts(cfg.vocab, 4)
+    eng, _ = _gen(model, params, prompts, spec=True)
+    s = eng.stats()
+    for key in ("spec_steps", "drafted_tokens", "accepted_tokens",
+                "spec_acceptance_rate"):
+        assert key in s
+    assert s["spec_steps"] > 0
+    assert 0 < s["spec_acceptance_rate"] <= 1
+    assert s["accepted_tokens"] <= s["drafted_tokens"]

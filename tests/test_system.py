@@ -88,9 +88,9 @@ def test_metrics_persisted_to_disk(stack):
         asyncio.run(main())
         n = sink.flush()
         assert n >= 3
-        lines = [json.loads(l) for l in open(path)]
-        assert all(l["kind"] == "request" for l in lines)
-        assert all("engine_latency" in l for l in lines)
+        lines = [json.loads(ln) for ln in open(path)]
+        assert all(ln["kind"] == "request" for ln in lines)
+        assert all("engine_latency" in ln for ln in lines)
 
 
 @pytest.mark.slow
