@@ -1,0 +1,173 @@
+"""Bursty-traffic serving bench: open-loop Poisson arrivals with periodic
+bursts replayed against a tracer-enabled replica, producing the windowed SLO
+timeline (``BENCH_traffic.json``) plus a self-contained HTML dashboard
+(``BENCH_traffic.html``) and a markdown twin (``BENCH_traffic.md``).
+
+Also measures tracing overhead: the same closed-loop workload at c32 with the
+tracer + iteration profiler enabled vs fully disabled (acceptance target:
+< 2% throughput delta when disabled — the ``if tracer:`` guard and the
+profiling wrapper must be near-free).
+
+Standalone smoke entry for CI:  ``python benchmarks/bench_traffic.py --smoke``
+(tiny schedule, same artifacts, seconds not minutes).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import tempfile
+from typing import Optional
+
+from benchmarks.common import build_replicas, get_model, row, stamp
+from repro.core import (Gateway, MetricsSink, ReplicaRouter, RouterConfig,
+                        SLOConfig, TimelineAggregator, Tracer,
+                        scale_gateway_config, summarize)
+from repro.core.client import merge_engine_timestamps, run_workload
+from repro.core.dashboard import render_dashboard, render_markdown
+from repro.data.workload import WorkloadSpec, sample_arrivals, sample_workload
+
+OUT_JSON = "BENCH_traffic.json"
+OUT_HTML = "BENCH_traffic.html"
+OUT_MD = "BENCH_traffic.md"
+
+
+def _serve(*, n_requests: int, arrival_rate: float, burst_mult: float,
+           burst_period_s: float, max_new: int, timeout_s: float,
+           tracing: bool, seed: int, window_s: float,
+           slo: Optional[SLOConfig] = None, trace_path: Optional[str] = None):
+    """One serving run. Open loop when ``arrival_rate > 0`` (the schedule is
+    part of the workload spec), closed loop at c32 otherwise. Returns
+    (client result, aggregator, n trace records exported)."""
+    cfg, _, _ = get_model()
+    tracer = Tracer(enabled=tracing)
+    sink = MetricsSink(path=trace_path,
+                       flush_interval_s=0.2 if trace_path else None)
+    fleet = build_replicas(
+        "scalellm", 1, tracer=tracer,
+        engine_overrides={"profile_steps": tracing})
+    router = ReplicaRouter(fleet, RouterConfig(policy="least_loaded"),
+                           sink=sink, tracer=tracer)
+    gw = Gateway(router, scale_gateway_config())
+    spec = WorkloadSpec(n_requests=n_requests, vocab=cfg.vocab, scale=0.04,
+                        seed=seed, arrival_rate=arrival_rate,
+                        burst_mult=burst_mult, burst_period_s=burst_period_s,
+                        burst_duty=0.3)
+    prompts, _ = sample_workload(spec)
+    arrivals = sample_arrivals(spec) if arrival_rate > 0 else None
+
+    async def main():
+        return await run_workload(gw, prompts, concurrency=32,
+                                  max_new_tokens=max_new, timeout_s=timeout_s,
+                                  arrivals=arrivals)
+
+    res = asyncio.run(main())
+    merge_engine_timestamps(res.requests, gw)
+    agg = TimelineAggregator(window_s=window_s, slo=slo)
+    agg.add_steps(fleet[0].step_records())
+    for r in res.requests:
+        if r.finished:
+            agg.add_request(r)
+    for rep in fleet:
+        rep.stop()
+    sink.close()
+    n_traces = 0
+    if trace_path and os.path.exists(trace_path):
+        with open(trace_path) as f:
+            n_traces = sum(1 for line in f
+                           if json.loads(line).get("kind") == "trace")
+    return res, agg, n_traces
+
+
+def run(quick: bool = True, smoke: bool = False):
+    if smoke:
+        n, rate, max_new, window_s, timeout = 8, 24.0, 6, 0.25, 30.0
+    elif quick:
+        n, rate, max_new, window_s, timeout = 24, 12.0, 8, 0.5, 60.0
+    else:
+        n, rate, max_new, window_s, timeout = 96, 16.0, 10, 1.0, 120.0
+    slo = SLOConfig(ttft_target_s=2.0, tbt_target_s=0.25)
+
+    trace_file = tempfile.NamedTemporaryFile(
+        suffix=".jsonl", prefix="traffic_trace_", delete=False)
+    trace_file.close()
+    try:
+        res, agg, n_traces = _serve(
+            n_requests=n, arrival_rate=rate, burst_mult=3.0,
+            burst_period_s=2.0, max_new=max_new, timeout_s=timeout,
+            tracing=True, seed=7, window_s=window_s, slo=slo,
+            trace_path=trace_file.name)
+    finally:
+        os.unlink(trace_file.name)
+    timeline = agg.timeline()
+    summary = agg.summary()
+    done = sum(1 for r in res.requests if r.finished)
+
+    # --- tracing overhead: closed loop c32, tracer+profiler on vs off -------
+    n_ovh = 8 if smoke else (16 if quick else 64)
+    s_on = summarize(*_ovh_run(n_ovh, tracing=True))
+    s_off = summarize(*_ovh_run(n_ovh, tracing=False))
+    overhead = (s_off.throughput_tok_s / s_on.throughput_tok_s - 1.0
+                if s_on.throughput_tok_s else 0.0)
+
+    rows = [
+        row("traffic.completed", 0.0, completed=done, total=n,
+            traces_exported=n_traces, windows=summary["n_windows"],
+            steps=summary["n_steps"]),
+        row("traffic.slo", 0.0,
+            slo_attainment=summary["slo_attainment"],
+            p50_ttft_s=summary["p50_ttft_s"], p99_ttft_s=summary["p99_ttft_s"],
+            p50_tbt_s=summary["p50_tbt_s"], p99_tbt_s=summary["p99_tbt_s"]),
+        row("traffic.throughput", 0.0,
+            tok_s=summary["throughput_tok_s"],
+            preemptions=summary["preemptions"]),
+        row("traffic.tracing_overhead", 0.0,
+            tok_s_tracing_on=s_on.throughput_tok_s,
+            tok_s_tracing_off=s_off.throughput_tok_s,
+            off_vs_on_gain=overhead),
+    ]
+
+    payload = {"bench": "traffic", "quick": quick, "smoke": smoke, **stamp(),
+               "schedule": {"n_requests": n, "arrival_rate": rate,
+                            "burst_mult": 3.0, "burst_period_s": 2.0,
+                            "burst_duty": 0.3, "max_new_tokens": max_new},
+               "slo": {"ttft_target_s": slo.ttft_target_s,
+                       "tbt_target_s": slo.tbt_target_s},
+               "window_s": window_s,
+               "summary": summary, "timeline": timeline,
+               "traces_exported": n_traces, "rows": rows}
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    title = "ScaleLLM serving timeline (bursty open-loop traffic)"
+    with open(OUT_HTML, "w") as f:
+        f.write(render_dashboard(timeline, summary, title))
+    with open(OUT_MD, "w") as f:
+        f.write(render_markdown(timeline, summary, title))
+    return rows
+
+
+def _ovh_run(n_requests: int, *, tracing: bool):
+    res, _, _ = _serve(n_requests=n_requests, arrival_rate=0.0,
+                       burst_mult=1.0, burst_period_s=0.0, max_new=8,
+                       timeout_s=60.0, tracing=tracing, seed=11,
+                       window_s=1.0)
+    return res.requests, res.t_start, res.t_end, 32
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny schedule for CI (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    from benchmarks.common import warmup
+    warmup()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print(f"{r['name']}: {json.dumps(r['derived'], default=str)}")
+    print(f"wrote {OUT_JSON}, {OUT_HTML}, {OUT_MD}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""CI gate for the traffic bench artifacts: validates ``BENCH_traffic.json``
+against the expected schema (required keys, window fields, non-empty
+timeline) and sanity-checks the ``BENCH_traffic.html`` dashboard. No
+dependencies; exits non-zero with a readable message on the first violation.
+
+Usage:  python benchmarks/check_traffic.py [json_path] [html_path]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+NUM = (int, float)
+SUMMARY_SCHEMA = {
+    "window_s": NUM, "n_windows": int, "n_steps": int, "n_requests": int,
+    "slo": dict, "slo_attainment": (*NUM, type(None)),
+    "p50_ttft_s": NUM, "p99_ttft_s": NUM, "p50_tbt_s": NUM, "p99_tbt_s": NUM,
+    "throughput_tok_s": NUM, "preemptions": int, "completed_tokens": int,
+}
+WINDOW_SCHEMA = {
+    "t": NUM, "window_s": NUM, "steps": int, "completed": int, "admitted": int,
+    "throughput_tok_s": NUM, "decode_tok_s": NUM, "prefill_tok_s": NUM,
+    "p50_ttft_s": NUM, "p99_ttft_s": NUM, "p50_tbt_s": NUM, "p99_tbt_s": NUM,
+    "p50_queue_wait_s": NUM, "p99_queue_wait_s": NUM,
+    "queue_depth_mean": NUM, "queue_depth_max": int,
+    "occupancy_frac": NUM, "budget_util": NUM, "kv_util_mean": NUM,
+    "busy_frac": NUM, "preemptions_per_s": NUM, "cow_pages_per_s": NUM,
+    "spec_acceptance": NUM, "slo_attainment": (*NUM, type(None)),
+    "ttft_ok_frac": (*NUM, type(None)), "tbt_ok_frac": (*NUM, type(None)),
+}
+
+
+def fail(msg: str) -> None:
+    print(f"check_traffic: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def require(obj: dict, schema: dict, where: str) -> None:
+    for key, typ in schema.items():
+        if key not in obj:
+            fail(f"{where}: missing key {key!r}")
+        if not isinstance(obj[key], typ):
+            fail(f"{where}: {key!r} has type {type(obj[key]).__name__}, "
+                 f"expected {typ}")
+
+
+def check_json(path: str) -> dict:
+    with open(path) as f:
+        d = json.load(f)
+    for key in ("bench", "git_rev", "timestamp", "schedule", "slo",
+                "window_s", "summary", "timeline", "traces_exported", "rows"):
+        if key not in d:
+            fail(f"{path}: missing top-level key {key!r}")
+    if d["bench"] != "traffic":
+        fail(f"{path}: bench is {d['bench']!r}, expected 'traffic'")
+    require(d["summary"], SUMMARY_SCHEMA, "summary")
+    if not d["timeline"]:
+        fail("timeline is empty — the run produced no windows")
+    for i, w in enumerate(d["timeline"]):
+        require(w, WINDOW_SCHEMA, f"timeline[{i}]")
+        for frac in ("occupancy_frac", "busy_frac", "kv_util_mean"):
+            if not 0.0 <= w[frac] <= 1.0 + 1e-9:
+                fail(f"timeline[{i}].{frac} = {w[frac]} out of [0, 1]")
+    ts = [w["t"] for w in d["timeline"]]
+    if ts != sorted(ts):
+        fail("timeline windows are not time-ordered")
+    s = d["summary"]
+    if s["n_requests"] <= 0:
+        fail("summary.n_requests is 0 — nothing completed")
+    if s["n_steps"] <= 0:
+        fail("summary.n_steps is 0 — no engine iterations profiled")
+    if d["traces_exported"] <= 0:
+        fail("traces_exported is 0 — the tracer exported no request traces")
+    if s["throughput_tok_s"] <= 0:
+        fail("summary.throughput_tok_s is 0")
+    names = [r.get("name") for r in d["rows"]]
+    for want in ("traffic.completed", "traffic.slo", "traffic.throughput",
+                 "traffic.tracing_overhead"):
+        if want not in names:
+            fail(f"rows: missing {want!r}")
+    return d
+
+
+def check_html(path: str, d: dict) -> None:
+    src = open(path).read()
+    if "<!doctype html>" not in src.lower():
+        fail(f"{path}: not an HTML document")
+    n_charts = src.count('<svg class="chart"')
+    if n_charts < 6:
+        fail(f"{path}: only {n_charts} charts rendered, expected >= 6")
+    if src.count('class="tile"') < 6:
+        fail(f"{path}: stat tiles missing")
+    if "data-points" not in src:
+        fail(f"{path}: charts carry no embedded data payloads")
+    if 'class="data"' not in src:
+        fail(f"{path}: accessible data tables missing")
+    if "prefers-color-scheme: dark" not in src:
+        fail(f"{path}: no dark-mode theme block")
+
+
+def main() -> None:
+    json_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_traffic.json"
+    html_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_traffic.html"
+    d = check_json(json_path)
+    check_html(html_path, d)
+    s = d["summary"]
+    print(f"check_traffic: OK — {s['n_requests']} requests, "
+          f"{s['n_windows']} windows, {s['n_steps']} steps, "
+          f"{d['traces_exported']} traces, "
+          f"{s['throughput_tok_s']:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,13 +55,17 @@ def get_model(arch: str = ARCH):
 
 
 def build_replicas(style: str, n_replicas: int = 1, *, arch: str = ARCH,
-                   max_slots: Optional[int] = None, klass: str = "default"):
+                   max_slots: Optional[int] = None, klass: str = "default",
+                   tracer=None, engine_overrides: Optional[dict] = None):
     cfg, model, params = get_model(arch)
     kw = dict(page_size=8, num_pages=256, max_seq=192, prefill_bucket=16,
               greedy=True, **ENGINE_STYLES[style])
     if max_slots is not None:
         kw["max_slots"] = max_slots
-    return [Replica(f"{style}-{i}", InferenceEngine(model, params, EngineConfig(**kw)),
+    if engine_overrides:
+        kw.update(engine_overrides)
+    return [Replica(f"{style}-{i}",
+                    InferenceEngine(model, params, EngineConfig(**kw), tracer=tracer),
                     klass=klass).start() for i in range(n_replicas)]
 
 

@@ -7,6 +7,8 @@ The ``prefill`` bench additionally persists its rows to ``BENCH_prefill.json``
 ``BENCH_prefix.json`` (warm-vs-cold TTFT under a shared system prompt), and
 the ``spec`` bench to ``BENCH_spec.json`` (speculative-vs-plain decode
 throughput) so subsequent PRs have a perf trajectory to regress against.
+The ``traffic`` bench persists its own ``BENCH_traffic.{json,html,md}``
+(windowed SLO timeline + dashboard — see bench_traffic.py).
 Persisted payloads are stamped with the git revision and a UTC timestamp.
 """
 from __future__ import annotations
@@ -26,7 +28,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names "
                          "(fig2,fig5,fig6,fig7,table1,fig8,kernels,prefill,"
-                         "prefix,spec)")
+                         "prefix,spec,traffic)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -34,7 +36,7 @@ def main() -> None:
                             bench_fig6_breakdown, bench_fig7_throughput,
                             bench_fig8_parallelism, bench_kernels,
                             bench_prefill, bench_prefix, bench_spec,
-                            bench_table1_streaming)
+                            bench_table1_streaming, bench_traffic)
     from benchmarks.common import stamp, warmup
 
     benches = {
@@ -48,6 +50,7 @@ def main() -> None:
         "prefill": bench_prefill,
         "prefix": bench_prefix,
         "spec": bench_spec,
+        "traffic": bench_traffic,   # writes BENCH_traffic.{json,html,md} itself
     }
     selected = args.only.split(",") if args.only else list(benches)
     unknown = [n for n in selected if n not in benches]

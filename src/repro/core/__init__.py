@@ -4,12 +4,13 @@ from repro.core.engine import EngineConfig, InferenceEngine, TokenEvent
 from repro.core.gateway import Gateway, GatewayConfig, baseline_gateway_config, scale_gateway_config
 from repro.core.kv_cache import OutOfPages, PagedAllocator, PrefixCache
 from repro.core.metrics import BenchmarkSummary, Request, now, request_metrics, summarize
-from repro.core.observability import MetricsSink
+from repro.core.observability import MetricsSink, Span, Tracer
 from repro.core.replica import Replica
 from repro.core.router import NoReplicaAvailable, ReplicaRouter, RouterConfig
 from repro.core.scheduler import ContinuousBatchScheduler
 from repro.core.serde import CODECS
 from repro.core.spec import PromptLookupDraft, target_probs, verify_draft
+from repro.core.timeline import LogHistogram, SLOConfig, StepRecord, TimelineAggregator
 
 __all__ = [
     "EngineConfig", "InferenceEngine", "TokenEvent",
@@ -20,4 +21,6 @@ __all__ = [
     "NoReplicaAvailable", "ReplicaRouter", "RouterConfig",
     "ContinuousBatchScheduler", "CODECS",
     "PromptLookupDraft", "target_probs", "verify_draft",
+    "Span", "Tracer", "LogHistogram", "SLOConfig", "StepRecord",
+    "TimelineAggregator",
 ]

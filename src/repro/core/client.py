@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import asyncio
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -31,47 +31,60 @@ async def run_workload(
     max_new_tokens: int = 64,
     timeout_s: float = 60.0,
     auth_token: str = "",
+    arrivals: Optional[Sequence[float]] = None,
 ) -> ClientResult:
+    """Closed loop by default (a ``concurrency``-wide window of in-flight
+    requests). With ``arrivals`` — offsets in seconds from the start, e.g.
+    from ``sample_arrivals`` — runs open loop: request *i* is submitted at
+    ``t_start + arrivals[i]`` regardless of how many are in flight, the
+    arrival pattern production traffic actually has (``concurrency`` is
+    ignored)."""
     codec = CODECS[gateway.cfg.codec]
     sem = asyncio.Semaphore(concurrency)
     requests: List[Request] = []
+    t_start = now()
 
     async def one(i: int, prompt: np.ndarray) -> Request:
+        if arrivals is not None:
+            await asyncio.sleep(max(0.0, t_start + arrivals[i] - now()))
+            return await _one_body(i, prompt)
         async with sem:
-            req_id = f"req-{i}"
-            shadow = Request(req_id=req_id, prompt_tokens=prompt,
-                             max_new_tokens=max_new_tokens)
-            requests.append(shadow)
-            shadow.t0 = now()
-            raw = codec.encode_request(req_id, prompt.tolist(), {
-                "max_new_tokens": max_new_tokens})
-            q: "asyncio.Queue[bytes]" = asyncio.Queue()
-            await gateway.handle(raw, q, auth_token=auth_token)
-            n = 0
-            while True:
-                try:
-                    data = await asyncio.wait_for(q.get(), timeout=timeout_s)
-                except asyncio.TimeoutError:
-                    shadow.error = "timeout"
-                    break
-                if data == b"":
-                    shadow.error = "rejected"
-                    break
-                _, token, idx, fin = codec.decode_token(data)
-                t = now()
-                if shadow.t5 == 0.0:
-                    shadow.t5 = t
-                if token >= 0:             # < 0: terminal no-token sentinel
-                    shadow.generated.append(token)
-                    shadow.token_times.append(t)
-                    n += 1
-                if fin:
-                    shadow.t6 = t
-                    shadow.finished = True
-                    break
-            return shadow
+            return await _one_body(i, prompt)
 
-    t_start = now()
+    async def _one_body(i: int, prompt: np.ndarray) -> Request:
+        req_id = f"req-{i}"
+        shadow = Request(req_id=req_id, prompt_tokens=prompt,
+                         max_new_tokens=max_new_tokens)
+        requests.append(shadow)
+        shadow.t0 = now()
+        raw = codec.encode_request(req_id, prompt.tolist(), {
+            "max_new_tokens": max_new_tokens})
+        q: "asyncio.Queue[bytes]" = asyncio.Queue()
+        await gateway.handle(raw, q, auth_token=auth_token)
+        n = 0
+        while True:
+            try:
+                data = await asyncio.wait_for(q.get(), timeout=timeout_s)
+            except asyncio.TimeoutError:
+                shadow.error = "timeout"
+                break
+            if data == b"":
+                shadow.error = "rejected"
+                break
+            _, token, idx, fin = codec.decode_token(data)
+            t = now()
+            if shadow.t5 == 0.0:
+                shadow.t5 = t
+            if token >= 0:             # < 0: terminal no-token sentinel
+                shadow.generated.append(token)
+                shadow.token_times.append(t)
+                n += 1
+            if fin:
+                shadow.t6 = t
+                shadow.finished = True
+                break
+        return shadow
+
     await asyncio.gather(*(one(i, p) for i, p in enumerate(prompts)))
     t_end = now()
     return ClientResult(requests=requests, t_start=t_start, t_end=t_end)

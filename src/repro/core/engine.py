@@ -35,8 +35,10 @@ import numpy as np
 
 from repro.core.kv_cache import PagedAllocator, PrefixCache
 from repro.core.metrics import Request, now
+from repro.core.observability import Tracer
 from repro.core.scheduler import ContinuousBatchScheduler, SlotState
 from repro.core.spec import PromptLookupDraft, verify_draft
+from repro.core.timeline import StepRecord
 from repro.models import LM, RunCtx
 
 # fixed operand width of the jitted COW page-copy call (pads with 0->0
@@ -70,6 +72,13 @@ class EngineConfig:
     spec_ngram_min: int = 1
     eos_id: int = -1                  # -1: no EOS (length-controlled)
     host_overhead_s: float = 0.0      # baseline-engine emulation knob (benchmarks)
+    profile_steps: bool = True        # keep one StepRecord per iteration in a
+                                      # bounded ring (cheap: a dataclass + a
+                                      # dozen counter reads per device call)
+    profile_fence: bool = False       # block_until_ready before timestamping
+                                      # each step (true device wall time; off
+                                      # by default — it serializes dispatch)
+    step_records_cap: int = 4096      # ring-buffer capacity for step records
     cache_dtype: Any = jnp.float32
     seed: int = 0
 
@@ -117,10 +126,12 @@ def sample_tokens(logits, key, temperature: float, top_p: float, greedy: bool):
 class InferenceEngine:
     """Single-replica engine. Thread-safety is owned by core.replica."""
 
-    def __init__(self, model: LM, params, cfg: EngineConfig, ctx: Optional[RunCtx] = None):
+    def __init__(self, model: LM, params, cfg: EngineConfig, ctx: Optional[RunCtx] = None,
+                 tracer: Optional[Tracer] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.tracer = tracer
         self.ctx = ctx or RunCtx(attn_backend="xla", moe_strategy="dropless",
                                  block_q=128, block_kv=128)
         cfgm = model.cfg
@@ -146,7 +157,8 @@ class InferenceEngine:
                              if self.spec_on else None)
         self.scheduler = ContinuousBatchScheduler(
             cfg.max_slots, self.allocator, policy=cfg.scheduler, max_seq=cfg.max_seq,
-            kv_extra=self.pos_offset, prefix_cache=self.prefix_cache)
+            kv_extra=self.pos_offset, prefix_cache=self.prefix_cache,
+            tracer=tracer)
         self.cache = model.init_cache(
             cfg.max_slots, cfg.max_seq, cfg.cache_dtype, kind="paged",
             page_size=cfg.page_size, num_pages=cfg.num_pages)
@@ -181,6 +193,12 @@ class InferenceEngine:
         self.accepted_tokens = 0          # draft tokens accepted (committed)
         self.prefix_cached_tokens = 0     # prefill tokens skipped via cache hits
         self.iter_token_counts: deque = deque(maxlen=4096)
+        # iteration profiler: one StepRecord per step() in a bounded ring
+        # (DESIGN.md §4); per-step row counts set by _step as it packs
+        self.step_records: deque = deque(maxlen=cfg.step_records_cap)
+        self._last_admitted = 0
+        self._last_prefill_rows = 0
+        self._last_decode_rows = 0
 
     # ------------------------------------------------------------- jitted fn
     def _step_fn(self, params, cache, tokens, starts, nvalid, slots, first,
@@ -300,16 +318,52 @@ class InferenceEngine:
     # ------------------------------------------------------------- step
     def step(self) -> List[TokenEvent]:
         """One token-budget iteration: admissions, the prefill chunk pack,
-        then one decode sweep — at most ``token_budget`` tokens total."""
+        then one decode sweep — at most ``token_budget`` tokens total.
+        With ``profile_steps`` each iteration leaves one :class:`StepRecord`
+        in the ``step_records`` ring buffer."""
+        if not self.cfg.profile_steps:
+            return self._step()
+        t0 = now()
+        preempt0 = self.scheduler.n_preemptions
+        cow0 = self.allocator.cow_copies
+        prefill0, decode0 = self.prefill_tokens, self.decode_tokens
+        drafted0, accepted0 = self.drafted_tokens, self.accepted_tokens
+        events = self._step()
+        if self.cfg.profile_fence:
+            jax.block_until_ready(self.cache)
+        alloc = self.allocator
+        self.step_records.append(StepRecord(
+            step=self.steps, t0=t0, t1=now(), budget=self.token_budget,
+            tokens_packed=self.iter_token_counts[-1] if self.iter_token_counts else 0,
+            n_admitted=self._last_admitted,
+            prefill_rows=self._last_prefill_rows,
+            prefill_tokens=self.prefill_tokens - prefill0,
+            decode_rows=self._last_decode_rows,
+            decode_tokens=self.decode_tokens - decode0,
+            drafted_tokens=self.drafted_tokens - drafted0,
+            accepted_tokens=self.accepted_tokens - accepted0,
+            occupancy=len(self.scheduler.running),
+            max_slots=self.cfg.max_slots,
+            queue_depth=len(self.scheduler.waiting),
+            kv_free_pages=alloc.free_pages,
+            kv_total_pages=alloc.num_pages - 1,   # page 0 is the null page
+            preemptions=self.scheduler.n_preemptions - preempt0,
+            cow_pages=alloc.cow_copies - cow0))
+        return events
+
+    def _step(self) -> List[TokenEvent]:
         cfg = self.cfg
+        tr = self.tracer
         events: List[TokenEvent] = []
         if cfg.host_overhead_s > 0:
             time.sleep(cfg.host_overhead_s)
         self.steps += 1
         iter_tokens = 0
+        self._last_admitted = self._last_prefill_rows = self._last_decode_rows = 0
 
         plan = self.scheduler.plan_iteration(self.token_budget, self.chunk,
                                              self.chunk_rows)
+        self._last_admitted = len(plan.admit)
         for st in plan.admit:
             r = st.request
             if r.t2 == 0.0:
@@ -317,6 +371,9 @@ class InferenceEngine:
             st.admitted_at = now()
             st.spec_k = self.spec_kmax if self.spec_on else 0
             self.prefix_cached_tokens += st.cached_tokens
+            if tr:
+                tr.end(r.req_id, "queue", cached_tokens=st.cached_tokens,
+                       resumed=bool(r.generated))
             if st.feed_len + self.pos_offset >= cfg.max_seq:
                 # prompt can never fit max_seq: fail fast with zero tokens
                 # instead of spinning on page growth that cannot succeed.
@@ -342,13 +399,20 @@ class InferenceEngine:
                 # the content before any later write or resume.
                 lo = (self.pos_offset + st.fed) // cfg.page_size
                 hi = (self.pos_offset + st.fed + n - 1) // cfg.page_size
-                if not self.scheduler.make_writable(st.slot, lo, hi, copies):
+                n_cow = len(copies)
+                writable = self.scheduler.make_writable(st.slot, lo, hi, copies)
+                if tr and len(copies) > n_cow:
+                    tr.event(st.request.req_id, "cow",
+                             n_pages=len(copies) - n_cow)
+                if not writable:
                     continue                               # no page for the copy: wait
             grants.append((st, n))
         grants = [(st, n) for st, n in grants if st.slot in self.scheduler.running]
         if copies:
             self._apply_copies(copies)                     # before the chunk writes
         if grants:
+            t_pack0 = now()
+            self._last_prefill_rows = len(grants)
             B, C = self.chunk_rows, self.chunk
             tokens = np.zeros((B, C), np.int32)
             starts = np.zeros((B,), np.int32)
@@ -387,6 +451,9 @@ class InferenceEngine:
                 st.fed += n
                 iter_tokens += n
                 self.prefill_tokens += n
+                if tr:
+                    tr.add(st.request.req_id, "prefill_chunk", t_pack0, t_emit,
+                           n_tokens=n, fed=st.fed, rows=len(grants))
                 self._register_prefix(st)
                 if st.prefilling:
                     continue                               # more chunks to go
@@ -438,8 +505,13 @@ class InferenceEngine:
             if self.prefix_cache is not None:
                 lo = (self.pos_offset + st.fed) // cfg.page_size
                 hi = (self.pos_offset + st.fed + k_i) // cfg.page_size
-                if not self.scheduler.make_writable(st.slot, lo, hi,
-                                                    dec_copies):
+                n_cow = len(dec_copies)
+                writable = self.scheduler.make_writable(st.slot, lo, hi,
+                                                        dec_copies)
+                if tr and len(dec_copies) > n_cow:
+                    tr.event(st.request.req_id, "cow",
+                             n_pages=len(dec_copies) - n_cow)
+                if not writable:
                     decode_sts.remove(st)
                     continue
             self.page_table[st.slot] = self.allocator.page_table_row(st.slot)
@@ -458,10 +530,12 @@ class InferenceEngine:
         for s in range(M):
             if s not in self.scheduler.running:
                 self.page_table[s] = 0
+        self._last_decode_rows = len(decode_sts)
         if drafts:
             iter_tokens = self._spec_sweep(decode_sts, drafts, events, iter_tokens)
             self.iter_token_counts.append(iter_tokens)
             return events
+        t_dec0 = now()
         tokens = np.zeros((M, 1), np.int32)
         starts = np.zeros((M,), np.int32)
         nvalid = np.zeros((M,), np.int32)
@@ -485,6 +559,11 @@ class InferenceEngine:
             st.last_token = tok
             st.all_tokens.append(tok)
             st.request.generated.append(tok)
+            if tr:
+                # consecutive decode iterations coalesce into one span per
+                # decode run (broken by preemption/spec/prefill spans)
+                tr.add(st.request.req_id, "decode", t_dec0, t_emit,
+                       merge=True, n_iters=1, tokens=1)
             fin = self._check_finished(st, tok)
             events.append(TokenEvent(st.request, tok, t_emit, fin))
             if fin:
@@ -501,6 +580,8 @@ class InferenceEngine:
         the slot's page tail (pages are append-only; positions at or past
         ``fed`` are never read and are overwritten by the next write)."""
         cfg = self.cfg
+        tr = self.tracer
+        t_sw0 = now()
         M = cfg.max_slots
         kcap = max(len(d) for d in drafts.values())
         C = next(w for w in self._spec_widths if w >= 1 + kcap)
@@ -542,17 +623,27 @@ class InferenceEngine:
                 elif na == 0:
                     st.spec_k = max(1, st.spec_k - 1)
             fin = False
+            n_committed = 0
             for tok in committed:
                 st.fed += 1                # commits the KV of the PREVIOUS token
                 st.last_token = tok
                 st.all_tokens.append(tok)
                 st.request.generated.append(tok)
                 self.decode_tokens += 1
+                n_committed += 1
                 fin = self._check_finished(st, tok)
                 events.append(TokenEvent(st.request, tok, t_emit, fin))
                 if fin:
                     self._finish(st)       # frees every page, rollback included
                     break
+            if tr:
+                if k_i:
+                    tr.add(st.request.req_id, "spec_verify", t_sw0, t_emit,
+                           merge=True, n_iters=1, drafted=k_i, accepted=na,
+                           tokens=n_committed)
+                else:                      # draft-free row riding the sweep
+                    tr.add(st.request.req_id, "decode", t_sw0, t_emit,
+                           merge=True, n_iters=1, tokens=n_committed)
             if not fin and na < k_i:
                 # rollback the rejected tail: keep pages through the next
                 # decode write (position fed), drop pages grown only for
@@ -610,6 +701,8 @@ class InferenceEngine:
 
     def cancel(self, req_id: str) -> bool:
         """Drop a request (hedging loser / client disconnect). Frees its slot."""
+        if self.tracer:
+            self.tracer.discard(req_id)
         for i, r in enumerate(self.scheduler.waiting):
             if r.req_id == req_id:
                 del self.scheduler.waiting[i]

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.engine import TokenEvent
 from repro.core.metrics import Request, now
-from repro.core.observability import MetricsSink
+from repro.core.observability import MetricsSink, Tracer
 from repro.core.router import ReplicaRouter
 from repro.core.safety import AuthError, Authenticator, ContentBlocked, ContentFilter, RateLimited, TokenBucket
 from repro.core.serde import CODECS
@@ -61,7 +61,8 @@ class Gateway:
                  rate_limiter: Optional[TokenBucket] = None,
                  content_filter: Optional[ContentFilter] = None,
                  sink: Optional[MetricsSink] = None,
-                 require_auth: bool = False):
+                 require_auth: bool = False,
+                 tracer: Optional[Tracer] = None):
         self.router = router
         self.cfg = cfg or scale_gateway_config()
         self.codec = CODECS[self.cfg.codec]
@@ -69,6 +70,7 @@ class Gateway:
         self.rate_limiter = rate_limiter
         self.content_filter = content_filter
         self.sink = sink or router.sink
+        self.tracer = tracer or router.tracer
         self.require_auth = require_auth
         self._pool_ready: Set[str] = set()     # replicas with a live connection
         self._sem: Optional[asyncio.Semaphore] = None
@@ -117,6 +119,10 @@ class Gateway:
         )
         request.t1 = t1
         self.requests[req_id] = request
+        if self.tracer:
+            # decode + auth/rate-limit/content checks (the sync-worker path)
+            self.tracer.add(req_id, "gateway_admission", t1, now(),
+                            codec=self.cfg.codec, n_prompt=len(tokens))
 
         loop = asyncio.get_running_loop()
         codec = self.codec
@@ -132,11 +138,19 @@ class Gateway:
 
         # connection to the chosen replica
         replica = self.router.select()
+        t_conn0 = now()
+        handshake = False
         if not self.cfg.pooled_connections:
             await asyncio.sleep(self.cfg.conn_setup_s)          # per-request handshake
+            handshake = True
         elif replica.replica_id not in self._pool_ready:
             await asyncio.sleep(self.cfg.conn_setup_s)          # pay once, then reuse
             self._pool_ready.add(replica.replica_id)
+            handshake = True
+        if self.tracer and handshake:
+            self.tracer.add(req_id, "connect", t_conn0, now(),
+                            pooled=self.cfg.pooled_connections,
+                            replica=replica.replica_id)
 
         self.router.submit(request, on_event, replica=replica)
         if sem is not None:

@@ -11,8 +11,9 @@ Metrics:
   engine latency    = t3 - t2
   throughput        = N_tokens / (T1 - T0)
   TTFT              = t4 - t0   (paper formula; t5-t0 from the user side)
-  TBT               = (t6 - t5) / (N_g - 1)   [ms/token; the paper's printed
-                       formula is its reciprocal — see DESIGN.md §9]
+  TBT               = (t6 - t5) / (N_g - 1)   [seconds/token, like every
+                       duration here; the paper's printed formula is its
+                       reciprocal — see DESIGN.md §9]
 """
 from __future__ import annotations
 

@@ -60,12 +60,20 @@ class Replica:
             self._thread.join(timeout=5)
 
     def kill(self) -> List[Tuple[Request, OnEvent]]:
-        """Simulated failure: stop serving, surrender in-flight requests."""
+        """Simulated failure: stop serving, surrender in-flight requests —
+        including ones still in the inbox (submitted but not yet moved to the
+        engine when the serving thread died), which would otherwise be lost
+        until the client times out."""
         self.healthy = False
         self.stop()
         with self._lock:
             orphans = list(self._inflight.values())
             self._inflight.clear()
+        while True:
+            try:
+                orphans.append(self._inbox.get_nowait())
+            except queue.Empty:
+                break
         return orphans
 
     # ------------------------------------------------------------- load stats
@@ -73,6 +81,13 @@ class Replica:
         """TokenEvent-level engine counters (prefix cache, COW, eviction) —
         safe to sample from any thread (all cumulative scalars)."""
         return self.engine.stats()
+
+    def step_records(self) -> list:
+        """Snapshot of the engine's iteration-profile ring buffer
+        (``StepRecord`` rows, oldest first). Safe to call from any thread:
+        deque snapshots are atomic under the GIL and records are immutable
+        once appended."""
+        return list(self.engine.step_records)
 
     @property
     def load(self) -> int:

@@ -28,8 +28,8 @@ from typing import Dict, List, Optional
 
 
 from repro.core.engine import TokenEvent
-from repro.core.metrics import Request
-from repro.core.observability import MetricsSink
+from repro.core.metrics import Request, now
+from repro.core.observability import MetricsSink, Tracer
 from repro.core.replica import OnEvent, Replica
 
 
@@ -46,10 +46,12 @@ class RouterConfig:
 
 class ReplicaRouter:
     def __init__(self, replicas: List[Replica], cfg: Optional[RouterConfig] = None,
-                 sink: Optional[MetricsSink] = None):
+                 sink: Optional[MetricsSink] = None,
+                 tracer: Optional[Tracer] = None):
         self.replicas = list(replicas)
         self.cfg = cfg or RouterConfig()
         self.sink = sink or MetricsSink()
+        self.tracer = tracer
         self._rr = 0
         self._lock = threading.Lock()
         self._live = 0                       # live concurrency estimate
@@ -89,11 +91,13 @@ class ReplicaRouter:
     # ------------------------------------------------------------- dispatch
     def submit(self, request: Request, on_event: OnEvent,
                replica: Optional[Replica] = None) -> Replica:
+        t_route0 = now()
         if replica is None or not replica.healthy:
             replica = self.select()
         with self._lock:
             self._live += 1
         got_first = {"v": False}
+        tracer = self.tracer
 
         def wrapped(ev: TokenEvent) -> None:
             got_first["v"] = True
@@ -101,8 +105,16 @@ class ReplicaRouter:
                 with self._lock:
                     self._live -= 1
                 self.sink.record_request(ev.request)
+                if tracer:
+                    # the request's span list is complete once its terminal
+                    # event fires — export through the JSONL sink and drop
+                    self.sink.record_trace(ev.request,
+                                           tracer.pop(ev.request.req_id))
             on_event(ev)
 
+        if tracer:
+            tracer.add(request.req_id, "route", t_route0, now(),
+                       replica=replica.replica_id, policy=self.cfg.policy)
         replica.submit(request, wrapped)
         self.sink.incr(f"routed_to.{replica.replica_id}")
 
@@ -127,6 +139,8 @@ class ReplicaRouter:
         request.hedged = True
         winner_decided = {"v": False}
         self.sink.incr("hedges")
+        if self.tracer:
+            self.tracer.event(request.req_id, "hedge", primary=primary.replica_id)
 
         def primary_guard(ev: TokenEvent) -> None:
             # primary finally produced output: cancel the shadow once
@@ -167,6 +181,10 @@ class ReplicaRouter:
                 continue
             target.submit(req, cb)
             self.sink.incr("failovers")
+            if self.tracer:
+                self.tracer.event(req.req_id, "failover",
+                                  from_replica=replica.replica_id,
+                                  to_replica=target.replica_id)
             n += 1
         return n
 

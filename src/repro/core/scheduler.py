@@ -30,6 +30,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.kv_cache import OutOfPages, PagedAllocator, PrefixCache
 from repro.core.metrics import Request
+from repro.core.observability import Tracer
 
 
 @dataclass
@@ -73,7 +74,8 @@ class IterationPlan:
 class ContinuousBatchScheduler:
     def __init__(self, max_slots: int, allocator: PagedAllocator,
                  policy: str = "max_utilization", max_seq: int = 4096,
-                 kv_extra: int = 0, prefix_cache: Optional[PrefixCache] = None):
+                 kv_extra: int = 0, prefix_cache: Optional[PrefixCache] = None,
+                 tracer: Optional[Tracer] = None):
         assert policy in ("max_utilization", "conservative", "static")
         # prefix sharing assumes token position == kv position; a kv prefix
         # (VLM patches) shifts every page, so the two are mutually exclusive
@@ -84,6 +86,7 @@ class ContinuousBatchScheduler:
         self.max_seq = max_seq
         self.kv_extra = kv_extra       # per-seq kv prefix (e.g. VLM patches)
         self.prefix_cache = prefix_cache
+        self.tracer = tracer
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, SlotState] = {}
         self._order = 0
@@ -91,6 +94,10 @@ class ContinuousBatchScheduler:
 
     # ------------------------------------------------------------------
     def add(self, request: Request, *, front: bool = False) -> None:
+        if self.tracer:
+            # one queue span per wait (re-opened on preempt re-queue);
+            # closed by the engine at admission
+            self.tracer.begin(request.req_id, "queue", requeued=front)
         if front:
             self.waiting.appendleft(request)
         else:
@@ -229,6 +236,9 @@ class ContinuousBatchScheduler:
         victim = max(victims, key=lambda st: st.order)
         victim.request.preemptions += 1
         self.n_preemptions += 1
+        if self.tracer:
+            self.tracer.event(victim.request.req_id, "preempt",
+                              fed=victim.fed, order=victim.order)
         self.allocator.free(victim.slot)
         del self.running[victim.slot]
         self.add(victim.request, front=True)

@@ -40,6 +40,15 @@ class WorkloadSpec:
     extractive_frac: float = 0.0
     boilerplate_frac: float = 0.0
     boilerplate_period: int = 4
+    # open-loop arrival schedule (bench_traffic): Poisson arrivals at
+    # ``arrival_rate`` req/s, with a periodic burst phase — for
+    # ``burst_duty`` of every ``burst_period_s`` the rate is multiplied by
+    # ``burst_mult`` (bursty production traffic; §5's constant-concurrency
+    # driver is the closed-loop special case). 0 disables (closed loop).
+    arrival_rate: float = 0.0
+    burst_mult: float = 1.0
+    burst_period_s: float = 10.0
+    burst_duty: float = 0.3
 
 
 def sample_workload(spec: WorkloadSpec) -> Tuple[List[np.ndarray], List[int]]:
@@ -73,3 +82,32 @@ def sample_workload(spec: WorkloadSpec) -> Tuple[List[np.ndarray], List[int]]:
         prompts = [np.concatenate([prefixes[i % len(prefixes)], p])
                    for i, p in enumerate(prompts)]
     return prompts, outs.tolist()
+
+
+def sample_arrivals(spec: WorkloadSpec) -> List[float]:
+    """Arrival offsets (seconds from bench start, sorted) for the open-loop
+    schedule: a piecewise-constant-rate Poisson process — base rate
+    ``arrival_rate``, stepped up to ``burst_mult`` x for the first
+    ``burst_duty`` fraction of every ``burst_period_s`` window. Seeded from
+    ``spec.seed`` but decoupled from prompt sampling (a different stream), so
+    changing the schedule never reshuffles the prompts."""
+    if spec.arrival_rate <= 0:
+        return [0.0] * spec.n_requests
+    rng = np.random.default_rng((spec.seed, 0xA221))
+
+    def rate_at(t: float) -> float:
+        if spec.burst_mult <= 1.0 or spec.burst_period_s <= 0:
+            return spec.arrival_rate
+        phase = (t % spec.burst_period_s) / spec.burst_period_s
+        return spec.arrival_rate * (spec.burst_mult if phase < spec.burst_duty
+                                    else 1.0)
+
+    # thinning: draw at the peak rate, accept with prob rate(t)/peak
+    peak = spec.arrival_rate * max(spec.burst_mult, 1.0)
+    t = 0.0
+    out: List[float] = []
+    while len(out) < spec.n_requests:
+        t += float(rng.exponential(1.0 / peak))
+        if rng.random() < rate_at(t) / peak:
+            out.append(t)
+    return out

@@ -61,6 +61,20 @@ def test_dynamic_blueprint_policy(model_setup):
         r.stop()
 
 
+def test_kill_surrenders_inbox_requests():
+    # a request submitted just before the failure sits in the inbox, not yet
+    # moved to the engine — kill() must surrender it with the in-flight ones
+    # or the client waits out its full timeout (failover race)
+    class _EngineStub:
+        pass
+
+    rep = Replica("k0", _EngineStub())       # thread never started
+    r = Request(req_id="k", prompt_tokens=np.arange(1, 4, dtype=np.int32))
+    rep.submit(r, lambda ev: None)
+    orphans = rep.kill()
+    assert [o[0].req_id for o in orphans] == ["k"]
+
+
 def test_failover_resumes_inflight(model_setup):
     cfg, model, params = model_setup
 
