@@ -1,0 +1,318 @@
+"""Chaos serving bench: replay bursty traffic while a seeded fault schedule
+injects replica crashes, step stalls, slow steps, transient submit errors,
+and artificial KV page pressure (DESIGN.md §5). Produces
+``BENCH_chaos.json`` with two scenarios:
+
+  failover   3 replicas; one crashes mid-run, one stalls past the step
+             watchdog. The router's health monitor must detect BOTH
+             automatically (no manual ``handle_failure``) and resume the
+             orphans mid-stream. Gated on availability, automatic failover
+             for crash AND stall, failover latency, a fault-free twin whose
+             greedy outputs bit-match the chaos run, and zero leaked KV
+             pages at exit (dead replicas included).
+
+  overload   1 replica behind a bounded admission queue: a burst over
+             ``max_inflight`` exercises load shedding (terminal "shed"
+             events, not hangs), tight per-request deadlines exercise
+             deadline cancellation (which must free pages), and sustained
+             overload arms the brown-out controller, which must recover by
+             hysteresis once the burst drains.
+
+Standalone smoke entry for CI:  ``python benchmarks/bench_chaos.py --smoke``.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import build_replicas, get_model, row, stamp
+from repro.core import (FaultInjector, FaultPlan, Gateway, GatewayConfig,
+                        MetricsSink, ReplicaRouter, RouterConfig, SLOConfig,
+                        TimelineAggregator, Tracer)
+from repro.core.client import merge_engine_timestamps, run_workload
+from repro.core.dashboard import render_dashboard, render_markdown
+from repro.core.metrics import now
+from repro.data.workload import WorkloadSpec, sample_workload
+
+OUT_JSON = "BENCH_chaos.json"
+OUT_HTML = "BENCH_chaos.html"
+OUT_MD = "BENCH_chaos.md"
+
+SEED = 1234
+
+
+def _drain_and_leakcheck(fleet, injector=None):
+    """Stop every replica (dead ones included) and assert the allocators
+    leaked nothing: artificial holds released, zero slot-referenced pages,
+    full invariant sweep. Returns total leaked pages (0 on success)."""
+    if injector is not None:
+        injector.release_holds([r.engine for r in fleet])
+    leaked = 0
+    for r in fleet:
+        r.stop()
+        r.engine.allocator.check_invariants()
+        leaked += r.engine.allocator.live_pages
+    return leaked
+
+
+def _completed_ok(requests):
+    return [r for r in requests if r.finished and r.error is None]
+
+
+def _p99_ttft(requests):
+    vals = [r.t4 - r.t0 for r in requests if r.t4 > 0 and r.t0 > 0]
+    return float(np.percentile(vals, 99)) if vals else 0.0
+
+
+# --------------------------------------------------------------- scenario A
+def _run_failover(n_requests: int, max_new: int, *, chaos: bool,
+                  window_s: float, timeout_s: float):
+    """Open-loop run over 3 replicas; with ``chaos`` the seeded fault plan
+    crashes replica 0, stalls replica 1, slows + pressures replica 2, and
+    opens a transient submit-error window. Detection is fully automatic:
+    the bench never calls handle_failure."""
+    cfg, _, _ = get_model()
+    span_s = 2.5
+    watchdog_s = 1.5
+    plan = FaultPlan(seed=SEED)
+    injector = None
+    if chaos:
+        (plan.crash("scalellm-0", 0.9)
+             .stall("scalellm-1", 1.2, 6.0)
+             .slow("scalellm-2", 0.3, 0.6, factor=2.0)
+             .kv_pressure("scalellm-2", 0.5, 1.0, pages=40)
+             .submit_error(0.3, 0.25, prob=1.0))
+        injector = FaultInjector(plan)
+    tracer = Tracer(enabled=True)
+    sink = MetricsSink()
+    fleet = build_replicas("scalellm", 3, tracer=tracer, injector=injector,
+                           step_watchdog_s=watchdog_s)
+    # retry budget sized so a request arriving at the submit-error window's
+    # open can always back off past its close (window 0.25 s; worst-case
+    # jitter 0.5x => cumulative backoff exceeds it by attempt 7)
+    router = ReplicaRouter(
+        fleet, RouterConfig(policy="least_loaded", retry_budget=8,
+                            retry_backoff_s=0.01, monitor_interval_s=0.03),
+        sink=sink, tracer=tracer, injector=injector)
+    gw = Gateway(router, GatewayConfig())
+    prompts, _ = sample_workload(WorkloadSpec(
+        n_requests=n_requests, vocab=cfg.vocab, scale=0.04, seed=SEED))
+    # deterministic even spacing: guarantees arrivals inside every fault
+    # window regardless of Poisson luck
+    arrivals = np.linspace(0.0, span_s, n_requests)
+    if injector is not None:
+        injector.start()
+    router.start_monitor()
+
+    async def main():
+        return await run_workload(gw, prompts, concurrency=32,
+                                  max_new_tokens=max_new,
+                                  timeout_s=timeout_s, arrivals=arrivals)
+
+    t_bench0 = now()
+    res = asyncio.run(main())
+    router.stop_monitor()
+    merge_engine_timestamps(res.requests, gw)
+    agg = TimelineAggregator(window_s=window_s,
+                             slo=SLOConfig(ttft_target_s=2.0, tbt_target_s=0.25))
+    for rep in fleet:
+        agg.add_steps(rep.step_records())
+    for r in res.requests:
+        if r.finished:
+            agg.add_request(r)
+    counters = sink.snapshot()
+    for name in ("shed", "retries", "deadline_exceeded"):
+        if counters.get(name):
+            agg.add_event(name, t_bench0, int(counters[name]))
+    for fe in router.failover_events:
+        agg.add_failover(fe.t, fe.latency_s)
+    leaked = _drain_and_leakcheck(fleet, injector)
+    ok = _completed_ok(res.requests)
+    return {
+        "n_requests": n_requests,
+        "completed": len(ok),
+        "availability": len(ok) / n_requests,
+        "p99_ttft_s": _p99_ttft(ok),
+        "auto_failovers": router.auto_failovers,
+        "manual_failovers": router.manual_failovers,
+        "failover_reasons": sorted({fe.reason for fe in router.failover_events}),
+        "failover_latency_max_s": max(
+            (fe.latency_s for fe in router.failover_events), default=0.0),
+        "failovers": [{"replica": fe.replica_id, "reason": fe.reason,
+                       "latency_s": fe.latency_s, "n_requests": fe.n_requests}
+                      for fe in router.failover_events],
+        "retries": counters.get("retries", 0),
+        "retry_exhausted": counters.get("retry_exhausted", 0),
+        "injected": dict(injector.injected) if injector else {},
+        "leaked_pages": leaked,
+        "outputs": {r.req_id: list(r.generated) for r in ok},
+    }, agg
+
+
+# --------------------------------------------------------------- scenario B
+def _run_overload(n_requests: int, *, window_s: float, timeout_s: float):
+    """Single replica behind a bounded admission queue. Phase 1 fills the
+    queue (two requests carry tight deadlines), phase 2 bursts over the
+    bound and gets shed, phase 3 arrives after the drain. Sustained
+    overload arms the brown-out; the bench then waits out the hysteresis
+    and asserts recovery."""
+    cfg, _, _ = get_model()
+    max_inflight = 6
+    gw_cfg = GatewayConfig(max_inflight=max_inflight, brownout_high=4,
+                           brownout_low=1, brownout_sustain_s=0.05,
+                           brownout_recover_s=0.4, brownout_max_new_tokens=4)
+    tracer = Tracer(enabled=True)
+    sink = MetricsSink()
+    fleet = build_replicas("scalellm", 1, tracer=tracer)
+    router = ReplicaRouter(fleet, RouterConfig(policy="least_loaded"),
+                           sink=sink, tracer=tracer)
+    gw = Gateway(router, gw_cfg)
+    prompts, _ = sample_workload(WorkloadSpec(
+        n_requests=n_requests, vocab=cfg.vocab, scale=0.04, seed=SEED + 1))
+    n_admit = max_inflight
+    n_late = 3
+    n_burst = n_requests - n_admit - n_late
+    arrivals = np.concatenate([
+        np.zeros(n_admit),                          # fill the queue
+        np.linspace(0.15, 0.7, n_burst),            # over the bound: shed
+        np.full(n_late, 3.0),                       # after the drain
+    ])
+    extra_params = [None] * n_requests
+    extra_params[0] = {"deadline_s": 0.25}          # expire mid-generation
+    extra_params[1] = {"deadline_s": 0.25}
+
+    async def main():
+        return await run_workload(gw, prompts, concurrency=64,
+                                  max_new_tokens=40, timeout_s=timeout_s,
+                                  arrivals=arrivals,
+                                  extra_params=extra_params)
+
+    t_bench0 = now()
+    res = asyncio.run(main())
+    merge_engine_timestamps(res.requests, gw)
+    activations = gw.brownout_activations
+    # hysteresis recovery: traffic is gone; wait out the calm window
+    deadline = time.monotonic() + 10 * gw_cfg.brownout_recover_s
+    while gw.poll_brownout() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    recovered = not gw.brownout
+    agg = TimelineAggregator(window_s=window_s,
+                             slo=SLOConfig(ttft_target_s=2.0, tbt_target_s=0.25))
+    agg.add_steps(fleet[0].step_records())
+    for r in res.requests:
+        if r.finished and r.error is None:
+            agg.add_request(r)
+    counters = sink.snapshot()
+    shed = sum(1 for r in res.requests if r.error == "shed")
+    expired = sum(1 for r in res.requests if r.error == "deadline_exceeded")
+    agg.add_event("shed", t_bench0, shed)
+    agg.add_event("deadline_exceeded", t_bench0, expired)
+    leaked = _drain_and_leakcheck(fleet)
+    ok = _completed_ok(res.requests)
+    return {
+        "n_requests": n_requests,
+        "max_inflight": max_inflight,
+        "completed": len(ok),
+        "shed": shed,
+        "deadline_exceeded": expired,
+        "engine_deadline_exceeded": fleet[0].engine.deadline_exceeded,
+        "inflight_max": gw.inflight_max,
+        "brownout_activations": activations,
+        "brownout_recovered": recovered,
+        "brownout_clamped": counters.get("brownout_clamped", 0),
+        "p99_ttft_completed_s": _p99_ttft(ok),
+        "leaked_pages": leaked,
+    }, agg
+
+
+def run(quick: bool = True, smoke: bool = False):
+    if smoke:
+        n_a, n_b, max_new, window_s, timeout = 16, 24, 8, 0.5, 60.0
+    elif quick:
+        n_a, n_b, max_new, window_s, timeout = 32, 32, 8, 0.5, 90.0
+    else:
+        n_a, n_b, max_new, window_s, timeout = 64, 60, 10, 1.0, 180.0
+
+    chaos, agg = _run_failover(n_a, max_new, chaos=True,
+                               window_s=window_s, timeout_s=timeout)
+    clean, _ = _run_failover(n_a, max_new, chaos=False,
+                             window_s=window_s, timeout_s=timeout)
+    # greedy determinism across retry/failover/resume: every request that
+    # completed in both runs must produce bit-identical tokens
+    common = set(chaos["outputs"]) & set(clean["outputs"])
+    mismatched = [rid for rid in sorted(common)
+                  if chaos["outputs"][rid] != clean["outputs"][rid]]
+    overload, _ = _run_overload(n_b, window_s=window_s, timeout_s=timeout)
+
+    timeline = agg.timeline()
+    summary = agg.summary()
+    failover = {k: v for k, v in chaos.items() if k != "outputs"}
+    failover.update({
+        "greedy_identical": not mismatched,
+        "greedy_compared": len(common),
+        "greedy_mismatched": mismatched,
+        "p99_ttft_fault_free_s": clean["p99_ttft_s"],
+        "p99_ttft_degradation": (chaos["p99_ttft_s"] / clean["p99_ttft_s"]
+                                 if clean["p99_ttft_s"] > 0 else 0.0),
+    })
+    rows = [
+        row("chaos.availability", 0.0,
+            availability=failover["availability"],
+            completed=failover["completed"], total=n_a,
+            leaked_pages=failover["leaked_pages"]),
+        row("chaos.failover", 0.0,
+            auto=failover["auto_failovers"], manual=failover["manual_failovers"],
+            reasons=failover["failover_reasons"],
+            latency_max_s=failover["failover_latency_max_s"],
+            retries=failover["retries"]),
+        row("chaos.determinism", 0.0,
+            greedy_identical=failover["greedy_identical"],
+            compared=failover["greedy_compared"],
+            p99_ttft_degradation=failover["p99_ttft_degradation"]),
+        row("chaos.overload", 0.0,
+            shed=overload["shed"], deadline_exceeded=overload["deadline_exceeded"],
+            inflight_max=overload["inflight_max"],
+            brownout_activations=overload["brownout_activations"],
+            brownout_recovered=overload["brownout_recovered"],
+            p99_ttft_completed_s=overload["p99_ttft_completed_s"],
+            leaked_pages=overload["leaked_pages"]),
+    ]
+    payload = {"bench": "chaos", "quick": quick, "smoke": smoke, **stamp(),
+               "seed": SEED, "window_s": window_s,
+               "fault_plan": [{"kind": "crash", "replica": "scalellm-0"},
+                              {"kind": "stall", "replica": "scalellm-1"},
+                              {"kind": "slow", "replica": "scalellm-2"},
+                              {"kind": "kv_pressure", "replica": "scalellm-2"},
+                              {"kind": "submit_error", "replica": None}],
+               "failover": failover, "overload": overload,
+               "summary": summary, "timeline": timeline, "rows": rows}
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    title = "ScaleLLM chaos run (injected crash/stall/slow/submit-error/KV pressure)"
+    with open(OUT_HTML, "w") as f:
+        f.write(render_dashboard(timeline, summary, title))
+    with open(OUT_MD, "w") as f:
+        f.write(render_markdown(timeline, summary, title))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny schedule for CI (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    from benchmarks.common import warmup
+    warmup()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print(f"{r['name']}: {json.dumps(r['derived'], default=str)}")
+    print(f"wrote {OUT_JSON}, {OUT_HTML}, {OUT_MD}")
+
+
+if __name__ == "__main__":
+    main()

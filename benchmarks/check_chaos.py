@@ -1,0 +1,168 @@
+"""Schema + resilience gate for BENCH_chaos.json (ISSUE 10 acceptance):
+
+  * availability >= 0.99 under the seeded fault schedule
+  * automatic failover for BOTH an injected crash and an injected stall,
+    with zero manual ``handle_failure`` calls and bounded detection latency
+  * greedy outputs of retried/failed-over requests bit-match the fault-free
+    twin run
+  * zero leaked KV pages at exit in both scenarios (dead replicas included)
+  * overload run actually shed, expired deadlines, respected the admission
+    bound, armed brown-out, and recovered from it by hysteresis
+
+Usage:  python benchmarks/check_chaos.py [BENCH_chaos.json]
+Exit 0 on pass; prints every violation and exits 1 otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+NUM = (int, float)
+
+FAILOVER_SCHEMA = {
+    "n_requests": NUM, "completed": NUM, "availability": NUM,
+    "p99_ttft_s": NUM, "auto_failovers": NUM, "manual_failovers": NUM,
+    "failover_reasons": list, "failover_latency_max_s": NUM,
+    "failovers": list, "retries": NUM, "retry_exhausted": NUM,
+    "injected": dict, "leaked_pages": NUM, "greedy_identical": bool,
+    "greedy_compared": NUM, "greedy_mismatched": list,
+    "p99_ttft_fault_free_s": NUM, "p99_ttft_degradation": NUM,
+}
+
+OVERLOAD_SCHEMA = {
+    "n_requests": NUM, "max_inflight": NUM, "completed": NUM, "shed": NUM,
+    "deadline_exceeded": NUM, "engine_deadline_exceeded": NUM,
+    "inflight_max": NUM, "brownout_activations": NUM,
+    "brownout_recovered": bool, "brownout_clamped": NUM,
+    "p99_ttft_completed_s": NUM, "leaked_pages": NUM,
+}
+
+_errors = []
+
+
+def fail(msg: str) -> None:
+    _errors.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def require(obj: dict, schema: dict, where: str) -> None:
+    for key, typ in schema.items():
+        if key not in obj:
+            fail(f"{where}: missing key {key!r}")
+        elif not isinstance(obj[key], typ):
+            fail(f"{where}: {key!r} should be {typ}, got "
+                 f"{type(obj[key]).__name__}={obj[key]!r}")
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        payload = json.load(f)
+    for key in ("bench", "git_rev", "timestamp", "seed", "fault_plan",
+                "failover", "overload", "summary", "timeline", "rows"):
+        if key not in payload:
+            fail(f"payload: missing key {key!r}")
+    if _errors:
+        return
+    if payload["bench"] != "chaos":
+        fail(f"payload: bench={payload['bench']!r}, expected 'chaos'")
+
+    fo = payload["failover"]
+    require(fo, FAILOVER_SCHEMA, "failover")
+    if _errors:
+        return
+
+    # --- availability + automatic detection --------------------------------
+    if fo["availability"] < 0.99:
+        fail(f"availability {fo['availability']:.4f} < 0.99 "
+             f"({fo['completed']}/{fo['n_requests']})")
+    if fo["auto_failovers"] < 2:
+        fail(f"auto_failovers {fo['auto_failovers']} < 2 "
+             "(crash AND stall must be detected automatically)")
+    if fo["manual_failovers"] != 0:
+        fail(f"manual_failovers {fo['manual_failovers']} != 0 "
+             "(detection must not require manual handle_failure)")
+    for reason in ("crash", "stall"):
+        if reason not in fo["failover_reasons"]:
+            fail(f"failover_reasons {fo['failover_reasons']} missing {reason!r}")
+    if not (0.0 < fo["failover_latency_max_s"] < 30.0):
+        fail(f"failover_latency_max_s {fo['failover_latency_max_s']} "
+             "not in (0, 30)")
+    if fo["retry_exhausted"] != 0:
+        fail(f"retry_exhausted {fo['retry_exhausted']} != 0 "
+             "(retry budget must outlast the submit-error window)")
+    for kind in ("crash", "submit_error"):
+        if not fo["injected"].get(kind):
+            fail(f"injected counters missing {kind!r}: {fo['injected']}")
+    if not fo["injected"].get("stall_ticks"):
+        fail(f"injected counters missing 'stall_ticks': {fo['injected']}")
+
+    # --- determinism + leaks -----------------------------------------------
+    if not fo["greedy_identical"]:
+        fail(f"greedy outputs diverged from the fault-free twin: "
+             f"{fo['greedy_mismatched']}")
+    if fo["greedy_compared"] < fo["n_requests"] * 0.99:
+        fail(f"greedy_compared {fo['greedy_compared']} < 99% of "
+             f"{fo['n_requests']} (both runs must complete)")
+    if fo["leaked_pages"] != 0:
+        fail(f"failover scenario leaked {fo['leaked_pages']} KV pages")
+
+    # --- overload / graceful degradation -----------------------------------
+    ov = payload["overload"]
+    require(ov, OVERLOAD_SCHEMA, "overload")
+    if _errors:
+        return
+    if ov["shed"] < 1:
+        fail("overload: no request was shed (bounded admission untested)")
+    if ov["deadline_exceeded"] < 1:
+        fail("overload: no deadline expired (cancellation path untested)")
+    if ov["engine_deadline_exceeded"] < 1:
+        fail("overload: engine-side deadline counter is zero")
+    if ov["inflight_max"] > ov["max_inflight"]:
+        fail(f"overload: inflight_max {ov['inflight_max']} exceeded "
+             f"max_inflight {ov['max_inflight']}")
+    if ov["brownout_activations"] < 1:
+        fail("overload: brown-out never armed under sustained overload")
+    if not ov["brownout_recovered"]:
+        fail("overload: brown-out did not recover after the burst drained")
+    if ov["completed"] < 1:
+        fail("overload: nothing completed")
+    if not (0.0 < ov["p99_ttft_completed_s"] < 30.0):
+        fail(f"overload: p99 TTFT of completed requests "
+             f"{ov['p99_ttft_completed_s']} not in (0, 30) s")
+    if ov["leaked_pages"] != 0:
+        fail(f"overload scenario leaked {ov['leaked_pages']} KV pages "
+             "(shed/deadline cancellation must free pages)")
+
+    # --- timeline carries the resilience counters --------------------------
+    summary = payload["summary"]
+    for key in ("shed", "retries", "deadline_exceeded", "failovers",
+                "failover_latency_max_s", "failover_latency_mean_s"):
+        if key not in summary:
+            fail(f"summary: missing resilience key {key!r}")
+
+
+def check_html(path: str) -> None:
+    try:
+        with open(path) as f:
+            html = f.read()
+    except OSError as e:
+        fail(f"dashboard: {e}")
+        return
+    for needle in ("Shed", "Failovers", "Resilience"):
+        if needle not in html:
+            fail(f"dashboard: missing {needle!r} tile/chart")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_chaos.json"
+    check(path)
+    check_html(path.replace(".json", ".html"))
+    if _errors:
+        print(f"\n{len(_errors)} violation(s) in {path}")
+        return 1
+    print(f"OK: {path} passes the chaos resilience gate")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

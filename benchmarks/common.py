@@ -56,7 +56,8 @@ def get_model(arch: str = ARCH):
 
 def build_replicas(style: str, n_replicas: int = 1, *, arch: str = ARCH,
                    max_slots: Optional[int] = None, klass: str = "default",
-                   tracer=None, engine_overrides: Optional[dict] = None):
+                   tracer=None, engine_overrides: Optional[dict] = None,
+                   injector=None, step_watchdog_s: Optional[float] = None):
     cfg, model, params = get_model(arch)
     kw = dict(page_size=8, num_pages=256, max_seq=192, prefill_bucket=16,
               greedy=True, **ENGINE_STYLES[style])
@@ -64,9 +65,12 @@ def build_replicas(style: str, n_replicas: int = 1, *, arch: str = ARCH,
         kw["max_slots"] = max_slots
     if engine_overrides:
         kw.update(engine_overrides)
+    rkw: dict = {"klass": klass, "injector": injector}
+    if step_watchdog_s is not None:
+        rkw["step_watchdog_s"] = step_watchdog_s
     return [Replica(f"{style}-{i}",
                     InferenceEngine(model, params, EngineConfig(**kw), tracer=tracer),
-                    klass=klass).start() for i in range(n_replicas)]
+                    **rkw).start() for i in range(n_replicas)]
 
 
 def run_endpoint(style: str, gateway: str, *, concurrency: int, n_requests: int,

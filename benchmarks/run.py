@@ -28,15 +28,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names "
                          "(fig2,fig5,fig6,fig7,table1,fig8,kernels,prefill,"
-                         "prefix,spec,traffic)")
+                         "prefix,spec,traffic,chaos)")
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_fig2_breakdown, bench_fig5_endpoints,
-                            bench_fig6_breakdown, bench_fig7_throughput,
-                            bench_fig8_parallelism, bench_kernels,
-                            bench_prefill, bench_prefix, bench_spec,
-                            bench_table1_streaming, bench_traffic)
+    from benchmarks import (bench_chaos, bench_fig2_breakdown,
+                            bench_fig5_endpoints, bench_fig6_breakdown,
+                            bench_fig7_throughput, bench_fig8_parallelism,
+                            bench_kernels, bench_prefill, bench_prefix,
+                            bench_spec, bench_table1_streaming, bench_traffic)
     from benchmarks.common import stamp, warmup
 
     benches = {
@@ -51,6 +51,7 @@ def main() -> None:
         "prefix": bench_prefix,
         "spec": bench_spec,
         "traffic": bench_traffic,   # writes BENCH_traffic.{json,html,md} itself
+        "chaos": bench_chaos,       # writes BENCH_chaos.{json,html,md} itself
     }
     selected = args.only.split(",") if args.only else list(benches)
     unknown = [n for n in selected if n not in benches]

@@ -1,12 +1,13 @@
 # The paper's primary contribution: the end-to-end serving system
 # (gateway + router + replicas + continuous-batching engine + paged KV).
 from repro.core.engine import EngineConfig, InferenceEngine, TokenEvent
+from repro.core.faults import FaultEvent, FaultInjector, FaultPlan, TransientSubmitError
 from repro.core.gateway import Gateway, GatewayConfig, baseline_gateway_config, scale_gateway_config
 from repro.core.kv_cache import OutOfPages, PagedAllocator, PrefixCache
 from repro.core.metrics import BenchmarkSummary, Request, now, request_metrics, summarize
 from repro.core.observability import MetricsSink, Span, Tracer
 from repro.core.replica import Replica
-from repro.core.router import NoReplicaAvailable, ReplicaRouter, RouterConfig
+from repro.core.router import FailoverEvent, NoReplicaAvailable, ReplicaRouter, RouterConfig
 from repro.core.scheduler import ContinuousBatchScheduler
 from repro.core.serde import CODECS
 from repro.core.spec import PromptLookupDraft, target_probs, verify_draft
@@ -14,6 +15,8 @@ from repro.core.timeline import LogHistogram, SLOConfig, StepRecord, TimelineAgg
 
 __all__ = [
     "EngineConfig", "InferenceEngine", "TokenEvent",
+    "FaultEvent", "FaultInjector", "FaultPlan", "TransientSubmitError",
+    "FailoverEvent",
     "Gateway", "GatewayConfig", "baseline_gateway_config", "scale_gateway_config",
     "OutOfPages", "PagedAllocator", "PrefixCache", "BenchmarkSummary",
     "Request", "now",

@@ -32,13 +32,15 @@ async def run_workload(
     timeout_s: float = 60.0,
     auth_token: str = "",
     arrivals: Optional[Sequence[float]] = None,
+    extra_params: Optional[Sequence[Optional[dict]]] = None,
 ) -> ClientResult:
     """Closed loop by default (a ``concurrency``-wide window of in-flight
     requests). With ``arrivals`` — offsets in seconds from the start, e.g.
     from ``sample_arrivals`` — runs open loop: request *i* is submitted at
     ``t_start + arrivals[i]`` regardless of how many are in flight, the
     arrival pattern production traffic actually has (``concurrency`` is
-    ignored)."""
+    ignored). ``extra_params[i]`` (e.g. ``{"deadline_s": 0.05, "greedy":
+    True}``) merges into request *i*'s wire params."""
     codec = CODECS[gateway.cfg.codec]
     sem = asyncio.Semaphore(concurrency)
     requests: List[Request] = []
@@ -57,8 +59,10 @@ async def run_workload(
                          max_new_tokens=max_new_tokens)
         requests.append(shadow)
         shadow.t0 = now()
-        raw = codec.encode_request(req_id, prompt.tolist(), {
-            "max_new_tokens": max_new_tokens})
+        params = {"max_new_tokens": max_new_tokens}
+        if extra_params is not None and extra_params[i]:
+            params.update(extra_params[i])
+        raw = codec.encode_request(req_id, prompt.tolist(), params)
         q: "asyncio.Queue[bytes]" = asyncio.Queue()
         await gateway.handle(raw, q, auth_token=auth_token)
         n = 0
@@ -102,3 +106,6 @@ def merge_engine_timestamps(client_reqs: List[Request], gateway: Gateway) -> Non
         r.preemptions = g.preemptions
         r.replica_id = g.replica_id
         r.hedged = g.hedged
+        r.error = r.error or g.error          # shed / deadline / no-replica
+        r.retries = g.retries
+        r.deadline_s = g.deadline_s

@@ -256,6 +256,8 @@ def render_dashboard(timeline: List[Dict[str, Any]], summary: Dict[str, Any],
         _tile("p99 TBT", _fmt(summary.get("p99_tbt_s"), "ms")),
         _tile("SLO attainment", _fmt(summary.get("slo_attainment"), "%")),
         _tile("Preemptions", _fmt(summary.get("preemptions"))),
+        _tile("Shed", _fmt(summary.get("shed", 0))),
+        _tile("Failovers", _fmt(summary.get("failovers", 0))),
     ])
     charts = "".join([
         _chart("TTFT", "time to first token per completion window", t, [
@@ -287,6 +289,17 @@ def render_dashboard(timeline: List[Dict[str, Any]], summary: Dict[str, Any],
         _chart("SLO attainment", f"fraction of completions meeting {slo_txt}",
                t, [("attained", 1, _col(timeline, "slo_attainment"), "%")],
                y_max=1.0),
+        _chart("Resilience", "load shedding, submit retries, deadline"
+               " cancellations, and replica failovers per window", t, [
+            ("shed", 1,
+             [float(v) if v is not None else None
+              for v in _col(timeline, "shed")], ""),
+            ("retries", 2,
+             [float(v) if v is not None else None
+              for v in _col(timeline, "retries")], ""),
+            ("failovers", 3,
+             [float(v) if v is not None else None
+              for v in _col(timeline, "failovers")], "")]),
     ])
     return f"""<!doctype html>
 <html lang="en"><head><meta charset="utf-8">

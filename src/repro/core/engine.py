@@ -185,9 +185,17 @@ class InferenceEngine:
                 k *= 2
             self._spec_widths.append(1 + self.spec_kmax)
         self._sampling = sampling
+        # resilience hooks (DESIGN.md §5): a FaultInjector evaluated at the
+        # top of every step (None costs one attribute check), the replica id
+        # it matches fault events against, and the brown-out flag that
+        # disables speculative drafting while degraded.
+        self.injector = None
+        self.fault_key: Optional[str] = None
+        self.degraded = False
         self.steps = 0
         self.decode_tokens = 0
         self.prefill_tokens = 0
+        self.deadline_exceeded = 0        # requests cancelled past deadline
         self.spec_steps = 0               # iterations that ran the verify sweep
         self.drafted_tokens = 0           # draft tokens fed through verify
         self.accepted_tokens = 0          # draft tokens accepted (committed)
@@ -321,6 +329,8 @@ class InferenceEngine:
         then one decode sweep — at most ``token_budget`` tokens total.
         With ``profile_steps`` each iteration leaves one :class:`StepRecord`
         in the ``step_records`` ring buffer."""
+        if self.injector is not None:
+            self.injector.on_engine_step(self)
         if not self.cfg.profile_steps:
             return self._step()
         t0 = now()
@@ -360,6 +370,23 @@ class InferenceEngine:
         self.steps += 1
         iter_tokens = 0
         self._last_admitted = self._last_prefill_rows = self._last_decode_rows = 0
+
+        # deadline sweep (DESIGN.md §5): cancel requests past their absolute
+        # cutoff before planning, so an expired request provably frees its
+        # pages this iteration and never consumes budget again. The terminal
+        # event carries error="deadline_exceeded" to the gateway/client.
+        for slot, req in self.scheduler.expire_deadlines(now()):
+            if slot is not None:
+                self.page_table[slot] = 0
+            self._drop_extras(req.req_id)
+            t_exp = now()
+            req.error = "deadline_exceeded"
+            req.finished = True
+            req.t3 = req.t3 or t_exp
+            self.deadline_exceeded += 1
+            if tr:
+                tr.event(req.req_id, "deadline_exceeded", slot=slot)
+            events.append(TokenEvent(req, -1, t_exp, True))
 
         plan = self.scheduler.plan_iteration(self.token_budget, self.chunk,
                                              self.chunk_rows)
@@ -480,7 +507,7 @@ class InferenceEngine:
         # match the slot's recent suffix against its own prompt+output
         # history; cap so the draft tail never runs past max_seq.
         drafts: Dict[int, List[int]] = {}
-        if self.spec_on:
+        if self.spec_on and not self.degraded:   # brown-out disables drafting
             for st in decode_sts:
                 g = min(plan.draft.get(st.slot, 0),
                         cfg.max_seq - 1 - self.pos_offset - st.fed)
@@ -691,6 +718,7 @@ class InferenceEngine:
             "evicted_pages": float(self.allocator.evicted_pages),
             "retired_pages": float(self.allocator.retired_pages),
             "preemptions": float(self.scheduler.n_preemptions),
+            "deadline_exceeded": float(self.deadline_exceeded),
             "kv_utilization": self.allocator.utilization(),
             "spec_steps": float(self.spec_steps),
             "drafted_tokens": float(self.drafted_tokens),

@@ -62,6 +62,9 @@ class PagedAllocator:
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         # pages the prefix cache holds a node for (content must not mutate)
         self._cached: set = set()
+        # artificially held pages (fault injection: simulated page pressure),
+        # keyed by hold name; excluded from the free list until released
+        self._held: Dict[str, List[int]] = {}
         # called with the page id when a retired page is reclaimed, so the
         # prefix cache can drop its node
         self.on_evict: Optional[Callable[[int], None]] = None
@@ -81,6 +84,13 @@ class PagedAllocator:
     @property
     def retired_pages(self) -> int:
         return len(self._lru)
+
+    @property
+    def live_pages(self) -> int:
+        """Pages currently referenced by at least one slot. Zero when every
+        sequence has finished — the leak check the chaos benchmarks gate on
+        (retired prefix-cache pages are refcount-0 and do not count)."""
+        return len(self._ref)
 
     def pages_needed(self, n_tokens: int) -> int:
         return (n_tokens + self.page_size - 1) // self.page_size
@@ -213,6 +223,28 @@ class PagedAllocator:
             dropped += 1
         return dropped
 
+    # ---------------- fault-injection holds ----------------
+    def hold(self, n_pages: int, key: str = "fault") -> int:
+        """Artificial page pressure (fault injection): move up to ``n_pages``
+        pages from the free list into the named hold, where ``free_pages``
+        no longer counts them. Only truly free pages are taken — never
+        retired (prefix-cache) pages, so injected pressure squeezes capacity
+        without silently wiping cached content. Returns the count held."""
+        bucket = self._held.setdefault(key, [])
+        take = min(max(n_pages, 0), len(self._free))
+        for _ in range(take):
+            bucket.append(self._free.pop())
+        return take
+
+    def held_pages(self, key: str = "fault") -> int:
+        return len(self._held.get(key, ()))
+
+    def release_hold(self, key: str = "fault") -> int:
+        """Return a named hold's pages to the free list."""
+        bucket = self._held.pop(key, [])
+        self._free.extend(bucket)
+        return len(bucket)
+
     # ---------------- prefix-cache hooks ----------------
     def mark_cached(self, page: int) -> None:
         self._cached.add(page)
@@ -239,11 +271,14 @@ class PagedAllocator:
                 own_counts[p] = own_counts.get(p, 0) + 1
         assert own_counts == dict(refs), "refcounts != ownership counts"
         live, free, lru = set(refs), set(self._free), set(self._lru)
+        held = {p for pages in self._held.values() for p in pages}
         assert live.isdisjoint(free) and live.isdisjoint(lru), \
             "page both referenced and free/retired"
         assert free.isdisjoint(lru), "page both free and retired"
-        assert len(live) + len(free) + len(lru) == self.num_pages - 1, "page leak"
-        assert 0 not in live | free | lru, "null page escaped"
+        assert held.isdisjoint(live | free | lru), "held page escaped the hold"
+        assert len(live) + len(free) + len(lru) + len(held) \
+            == self.num_pages - 1, "page leak"
+        assert 0 not in live | free | lru | held, "null page escaped"
         assert self._cached <= live | lru, "cached page neither live nor retired"
 
 

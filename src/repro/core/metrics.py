@@ -55,6 +55,12 @@ class Request:
     preemptions: int = 0
     replica_id: Optional[str] = None
     hedged: bool = False
+    # request-lifecycle hardening (DESIGN.md §5): a deadline budget in
+    # seconds (propagated gateway -> router -> scheduler) and its absolute
+    # cutoff on the monotonic clock (t1 + deadline_s); 0.0 = no deadline.
+    deadline_s: Optional[float] = None
+    deadline_at: float = 0.0
+    retries: int = 0                          # transient-submit retries spent
 
     @property
     def n_generated(self) -> int:

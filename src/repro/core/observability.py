@@ -232,6 +232,16 @@ class MetricsSink:
         with self._lock:
             self.counters[name] += value
 
+    def observe(self, name: str, value: float) -> None:
+        """One observation of a distribution-valued metric (e.g. failover
+        latency): keeps ``.count`` / ``.sum`` / ``.max`` counters so the
+        snapshot exposes mean and worst case without storing samples."""
+        with self._lock:
+            self.counters[f"{name}.count"] += 1
+            self.counters[f"{name}.sum"] += value
+            if value > self.counters[f"{name}.max"]:
+                self.counters[f"{name}.max"] = value
+
     def record_request(self, r: Request) -> None:
         m = request_metrics(r)
         rec = _dumps({"kind": "request", **asdict(m)})

@@ -26,13 +26,20 @@ OnEvent = Callable[[TokenEvent], None]
 class Replica:
     def __init__(self, replica_id: str, engine: InferenceEngine, *,
                  klass: str = "default", tp_degree: int = 1,
-                 step_watchdog_s: float = 30.0):
+                 step_watchdog_s: float = 30.0, injector=None):
         self.replica_id = replica_id
         self.engine = engine
         self.klass = klass                     # blueprint class: "high_tp" | "high_replica" | ...
         self.tp_degree = tp_degree
         self.healthy = True
+        self.crashed = False                   # injected crash fired (thread exited)
         self.step_watchdog_s = step_watchdog_s
+        # fault injection (DESIGN.md §5): evaluated once per loop iteration;
+        # also wired into the engine's per-step hook under this replica's id.
+        self.injector = injector
+        if injector is not None and hasattr(engine, "injector"):
+            engine.injector = injector
+            engine.fault_key = replica_id
         self.last_step_at = time.monotonic()
         self._inbox: "queue.Queue[Tuple[Request, OnEvent]]" = queue.Queue()
         self._inflight: Dict[str, Tuple[Request, OnEvent]] = {}
@@ -74,7 +81,26 @@ class Replica:
                 orphans.append(self._inbox.get_nowait())
             except queue.Empty:
                 break
+        # free the dead engine's KV: a crashed replica's allocator must not
+        # leak its orphans' pages (the leak check at bench exit covers dead
+        # replicas too). getattr-guarded: tests stub the engine.
+        cancel = getattr(self.engine, "cancel", None)
+        if cancel is not None:
+            for req, _ in orphans:
+                cancel(req.req_id)
         return orphans
+
+    def thread_dead(self) -> bool:
+        """Crash detection: the serving thread exited without being asked to
+        stop (injected crash / unhandled exception in the loop)."""
+        return (self._thread is not None and not self._thread.is_alive()
+                and not self._stop)
+
+    def set_degraded(self, on: bool) -> None:
+        """Brown-out toggle from the gateway: disables speculative drafting
+        on this replica's engine while overloaded."""
+        if hasattr(self.engine, "degraded"):
+            self.engine.degraded = on
 
     # ------------------------------------------------------------- load stats
     def engine_stats(self) -> Dict[str, float]:
@@ -114,6 +140,21 @@ class Replica:
     # ------------------------------------------------------------- engine loop
     def _loop(self) -> None:
         while not self._stop:
+            if self.injector is not None:
+                act = self.injector.replica_action(self.replica_id)
+                if act is not None:
+                    kind, remaining = act
+                    if kind == "crash":
+                        # the serving thread exits WITHOUT cleanup: healthy
+                        # stays True, inflight/inbox stay populated — exactly
+                        # what a real process death looks like. Detection is
+                        # the router monitor's job (thread_dead()).
+                        self.crashed = True
+                        return
+                    # stall: frozen loop — no stepping, no inbox drain, no
+                    # heartbeat update, so the watchdog fires.
+                    time.sleep(min(max(remaining, 0.0), 0.02))
+                    continue
             moved = False
             while True:
                 try:
@@ -155,6 +196,9 @@ class Replica:
                 self._wake.clear()
 
     def watchdog_expired(self) -> bool:
-        """Straggler detection: the engine has work but hasn't stepped lately."""
-        return (self.healthy and self.engine.has_work()
+        """Straggler detection: the replica has work (in the engine OR stuck
+        in an undrained inbox — a stalled loop drains nothing) but hasn't
+        stepped lately."""
+        return (self.healthy
+                and (self.engine.has_work() or not self._inbox.empty())
                 and time.monotonic() - self.last_step_at > self.step_watchdog_s)

@@ -227,6 +227,30 @@ class ContinuousBatchScheduler:
         return plan
 
     # ------------------------------------------------------------------
+    def expire_deadlines(self, t: float) -> List[Tuple[Optional[int], Request]]:
+        """Deadline-exceeded cancellation (DESIGN.md §5): drop every waiting
+        or running request whose ``deadline_at`` has passed. Running slots go
+        through ``finish`` so their pages are freed with full refcount
+        semantics (shared prefix pages decref, COW-detached pages return to
+        the free list). Returns ``(slot, request)`` pairs — ``slot`` is None
+        for requests still in the waiting queue — so the engine can emit the
+        terminal events and clear its page-table rows."""
+        out: List[Tuple[Optional[int], Request]] = []
+        for i in reversed(range(len(self.waiting))):
+            r = self.waiting[i]
+            if r.deadline_at and t > r.deadline_at:
+                del self.waiting[i]
+                if self.tracer:
+                    self.tracer.end(r.req_id, "queue", expired=True)
+                out.append((None, r))
+        for slot, st in list(self.running.items()):
+            r = st.request
+            if r.deadline_at and t > r.deadline_at:
+                self.finish(slot)
+                out.append((slot, r))
+        return out
+
+    # ------------------------------------------------------------------
     def preempt_one(self, protect: Optional[int] = None) -> Optional[int]:
         """Pause the most recently admitted running request (vLLM-style
         latest-first victim), freeing its pages. Returns the freed slot."""

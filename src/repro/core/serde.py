@@ -22,7 +22,7 @@ class JsonVerbose:
 
     @staticmethod
     def encode_request(req_id: str, tokens, params: Dict[str, Any]) -> bytes:
-        return json.dumps({
+        d = {
             "id": req_id,
             "object": "chat.completion.request",
             "model": params.get("model", "repro"),
@@ -32,7 +32,12 @@ class JsonVerbose:
             "top_p": params.get("top_p", 0.7),
             "max_tokens": params.get("max_new_tokens", 64),
             "stream": True,
-        }).encode()
+        }
+        if params.get("greedy"):
+            d["greedy"] = True
+        if params.get("deadline_s") is not None:
+            d["deadline_s"] = float(params["deadline_s"])
+        return json.dumps(d).encode()
 
     @staticmethod
     def decode_request(data: bytes) -> Tuple[str, list, Dict[str, Any]]:
@@ -72,12 +77,22 @@ class BinaryCompact:
         return msgpack.packb((req_id, [int(t) for t in tokens],
                               params.get("temperature", 0.5),
                               params.get("top_p", 0.7),
-                              params.get("max_new_tokens", 64)))
+                              params.get("max_new_tokens", 64),
+                              bool(params.get("greedy", False)),
+                              params.get("deadline_s")))
 
     @staticmethod
     def decode_request(data: bytes) -> Tuple[str, list, Dict[str, Any]]:
-        req_id, tokens, temp, top_p, mnt = msgpack.unpackb(data)
-        return req_id, tokens, {"temperature": temp, "top_p": top_p, "max_new_tokens": mnt}
+        parts = msgpack.unpackb(data)
+        req_id, tokens, temp, top_p, mnt = parts[:5]
+        params: Dict[str, Any] = {"temperature": temp, "top_p": top_p,
+                                  "max_new_tokens": mnt}
+        # trailing fields are optional: old 5-tuple frames still decode
+        if len(parts) > 5 and parts[5]:
+            params["greedy"] = True
+        if len(parts) > 6 and parts[6] is not None:
+            params["deadline_s"] = parts[6]
+        return req_id, tokens, params
 
     @staticmethod
     def encode_token(req_id: str, token: int, index: int, finished: bool) -> bytes:

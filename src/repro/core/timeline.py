@@ -158,6 +158,9 @@ class _Window:
     slo_attained: int = 0
     ttft_ok: int = 0
     tbt_ok: int = 0
+    # resilience events (DESIGN.md §5), bucketed by occurrence time
+    events: Dict[str, int] = field(default_factory=dict)
+    failover_latencies: List[float] = field(default_factory=list)
 
 
 class TimelineAggregator:
@@ -245,6 +248,19 @@ class TimelineAggregator:
         for r in requests:
             self.add_request(r)
 
+    def add_event(self, name: str, t: float, n: int = 1) -> None:
+        """Count a resilience event (shed / retry / deadline_exceeded / ...)
+        in the window containing ``t``."""
+        w = self._window(t)
+        w.events[name] = w.events.get(name, 0) + n
+
+    def add_failover(self, t: float, latency_s: float) -> None:
+        """One replica failover: counted as an event and its detection
+        latency (last heartbeat to detection) kept for the summary."""
+        w = self._window(t)
+        w.events["failovers"] = w.events.get("failovers", 0) + 1
+        w.failover_latencies.append(latency_s)
+
     # --------------------------------------------------------------- output
     def timeline(self) -> List[Dict[str, Any]]:
         """One dict per non-empty window, time-ordered. Gaps (windows with
@@ -283,6 +299,10 @@ class TimelineAggregator:
                 "ttft_ok_frac": (w.ttft_ok / w.completed
                                  if w.completed else None),
                 "tbt_ok_frac": (w.tbt_ok / w.completed if w.completed else None),
+                "shed": w.events.get("shed", 0),
+                "retries": w.events.get("retries", 0),
+                "deadline_exceeded": w.events.get("deadline_exceeded", 0),
+                "failovers": w.events.get("failovers", 0),
             })
         return out
 
@@ -305,4 +325,14 @@ class TimelineAggregator:
             "throughput_tok_s": total_tokens / span_s if span_s else 0.0,
             "preemptions": sum(w.preemptions for w in wins),
             "completed_tokens": sum(w.completed_tokens for w in wins),
+            "shed": sum(w.events.get("shed", 0) for w in wins),
+            "retries": sum(w.events.get("retries", 0) for w in wins),
+            "deadline_exceeded": sum(w.events.get("deadline_exceeded", 0)
+                                     for w in wins),
+            "failovers": sum(w.events.get("failovers", 0) for w in wins),
+            "failover_latency_max_s": max(
+                (v for w in wins for v in w.failover_latencies), default=0.0),
+            "failover_latency_mean_s": (
+                (lambda vs: sum(vs) / len(vs) if vs else 0.0)(
+                    [v for w in wins for v in w.failover_latencies])),
         }

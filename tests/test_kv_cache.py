@@ -321,3 +321,91 @@ if st is not None:
     @given(_OPS)
     def test_refcount_cow_trie_traces_keep_invariants(trace):
         _run_refcount_trace(trace)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end chaos property (DESIGN.md §5): an injected replica crash with
+# cancellations racing the automatic failover must leak zero KV pages on
+# every allocator — the dead replica's included — and no request may observe
+# an event after its terminal one.
+# ---------------------------------------------------------------------------
+
+def test_crash_cancel_failover_leaks_nothing():
+    import threading
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import tiny_config
+    from repro.core import (EngineConfig, FaultInjector, FaultPlan,
+                            InferenceEngine, Replica, ReplicaRouter,
+                            RouterConfig)
+    from repro.core.metrics import Request
+    from repro.models import build_model
+
+    cfg = tiny_config("qwen2.5-3b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    def engine():
+        return InferenceEngine(model, params, EngineConfig(
+            max_slots=4, page_size=8, num_pages=128, max_seq=128,
+            prefill_bucket=16, greedy=True))
+
+    inj = FaultInjector(FaultPlan().crash("x0", 0.25)).start()
+    r0 = Replica("x0", engine(), injector=inj).start()
+    r1 = Replica("x1", engine()).start()
+    router = ReplicaRouter([r0, r1], RouterConfig(policy="round_robin",
+                                                  monitor_interval_s=0.01))
+    router.start_monitor()
+
+    events = {}                  # rid -> [finished flags, in delivery order]
+    lock = threading.Lock()
+
+    def on_event(ev):
+        with lock:
+            events.setdefault(ev.request.req_id, []).append(ev.finished)
+
+    rng = np.random.default_rng(5)
+    reqs, targets = [], []
+    for i in range(6):
+        req = Request(req_id=f"cc{i}",
+                      prompt_tokens=rng.integers(1, cfg.vocab, 12,
+                                                 dtype=np.int64).astype(np.int32),
+                      max_new_tokens=48)
+        reqs.append(req)
+        targets.append(router.submit(req, on_event))
+
+    # cancel two requests routed to the survivor while the crash lands on x0
+    time.sleep(0.1)
+    cancelled = set()
+    for req, target in zip(reqs, targets):
+        if target.replica_id == "x1" and len(cancelled) < 2:
+            target.cancel(req.req_id)
+            cancelled.add(req.req_id)
+
+    deadline = time.monotonic() + 60
+    live = [r for r in reqs if r.req_id not in cancelled]
+    while (not all(r.finished for r in live)
+           and time.monotonic() < deadline):
+        time.sleep(0.02)
+    router.stop_monitor()
+    for r in (r0, r1):
+        r.stop()
+
+    assert all(r.finished for r in live), "chaos run did not converge"
+    assert all(r.error is None for r in live)
+    assert all(len(r.generated) == 48 for r in live)
+    assert router.auto_failovers == 1 and router.manual_failovers == 0
+    assert [e.reason for e in router.failover_events] == ["crash"]
+    # terminal-guard property: nothing delivered after the terminal event
+    for rid, flags in events.items():
+        if True in flags:
+            assert flags.index(True) == len(flags) - 1, \
+                f"{rid} observed events after its terminal"
+    # zero-leak property: both allocators fully drained, invariants hold
+    for r in (r0, r1):
+        r.engine.allocator.check_invariants()
+        assert r.engine.allocator.live_pages == 0, \
+            f"{r.replica_id} leaked {r.engine.allocator.live_pages} pages"
